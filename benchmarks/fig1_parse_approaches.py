@@ -1,0 +1,39 @@
+"""Paper Fig. 1: Edgelist-reading approach ladder.
+
+CPU/TPU mapping of the paper's ladder:
+  fstream-plain  -> naive python line loop (stream extraction)
+  fopen-*        -> np.loadtxt (library C parser, line-at-a-time)
+  (PIGO two-pass)-> read_edgelist_pigo (equal split + count pass + parse)
+  mmap-custom    -> GVEL single-pass vectorized numpy engine
+  mmap-custom    -> GVEL jitted block engine (device pipeline)
+"""
+from .common import dataset, emit, timeit
+
+
+def run():
+    from repro.core import baselines, read_edgelist, read_edgelist_numpy
+    path, v, e = dataset("web_rmat")
+
+    cases = {
+        "fig1.naive_stream": lambda: baselines.read_edgelist_naive(
+            path, num_vertices=v),
+        "fig1.loadtxt": lambda: baselines.read_edgelist_loadtxt(
+            path, num_vertices=v),
+        "fig1.pigo_twopass": lambda: baselines.read_edgelist_pigo(
+            path, num_vertices=v),
+        "fig1.gvel_numpy": lambda: read_edgelist_numpy(
+            path, num_vertices=v),
+        "fig1.gvel_jax": lambda: read_edgelist(
+            path, num_vertices=v, beta=256 * 1024),
+    }
+    base = None
+    for name, fn in cases.items():
+        repeat = 1 if "naive" in name or "loadtxt" in name else 3
+        t = timeit(fn, repeat=repeat, warmup=0 if repeat == 1 else 1)
+        if base is None:
+            base = t
+        emit(name, t, f"edges_per_s={e / t:.3e};rel_to_naive={base / t:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

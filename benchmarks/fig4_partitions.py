@@ -1,0 +1,25 @@
+"""Paper Fig. 4: partition-count (rho) sweep for the staged CSR build."""
+import jax.numpy as jnp
+
+from .common import dataset, emit, timeit
+
+
+def run():
+    from repro.core import build, read_edgelist_numpy
+    path, v, e = dataset("web_rmat")
+    el = read_edgelist_numpy(path, num_vertices=v)
+    n = int(el.num_edges)
+    src = jnp.asarray(el.src[:n])
+    dst = jnp.asarray(el.dst[:n])
+    base = None
+    for rho in [1, 2, 4, 8, 16, 32]:
+        def fn(r=rho):
+            o, t, _ = build.csr_staged(src, dst, None, v, rho=r)
+            t.block_until_ready()
+        t = timeit(fn)
+        base = base or t
+        emit(f"fig4.rho_{rho}", t, f"rel_to_rho1={t / base:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

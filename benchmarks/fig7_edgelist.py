@@ -1,0 +1,21 @@
+"""Paper Fig. 7: Edgelist reading, GVEL vs PIGO, per graph class.
+Reports the edges/s read rate (the paper's headline: 1.9 B edges/s on
+64 Xeon cores + RAID SSDs; this host is 1 core — rates scale with cores
+because the path is pleasingly parallel, see fig9)."""
+from .common import DATASETS, dataset, emit, timeit
+
+
+def run():
+    from repro.core import baselines, read_edgelist_numpy
+
+    for ds in DATASETS:
+        path, v, e = dataset(ds)
+        t_p = timeit(lambda: baselines.read_edgelist_pigo(path, num_vertices=v))
+        t_g = timeit(lambda: read_edgelist_numpy(path, num_vertices=v))
+        emit(f"fig7.{ds}.pigo", t_p, f"edges_per_s={e / t_p:.3e}")
+        emit(f"fig7.{ds}.gvel", t_g,
+             f"edges_per_s={e / t_g:.3e};vs_pigo={t_p / t_g:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,21 @@
+"""Paper Fig. 8: time split between Edgelist reading and CSR conversion."""
+from .common import DATASETS, dataset, emit, timeit
+
+
+def run():
+    from repro.core import convert_to_csr, read_edgelist_numpy
+
+    for ds in DATASETS:
+        path, v, e = dataset(ds)
+        el = read_edgelist_numpy(path, num_vertices=v)
+        t_el = timeit(lambda: read_edgelist_numpy(path, num_vertices=v))
+        t_c = timeit(lambda: convert_to_csr(el, method="staged", rho=4,
+                                            engine="numpy"))
+        emit(f"fig8.{ds}.edgelist", t_el,
+             f"share={t_el / (t_el + t_c) * 100:.0f}%")
+        emit(f"fig8.{ds}.to_csr", t_c,
+             f"share={t_c / (t_el + t_c) * 100:.0f}%")
+
+
+if __name__ == "__main__":
+    run()

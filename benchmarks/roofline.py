@@ -1,0 +1,107 @@
+"""Roofline analysis from the dry-run's compiled artifacts.
+
+For every (arch x shape x mesh) JSON produced by repro.launch.dryrun:
+
+  compute term    = HLO_flops_total / (chips * 197 TF/s bf16)
+  memory term     = HLO_bytes_total / (chips * 819 GB/s)
+  collective term = collective_bytes_total / (chips * 50 GB/s)
+
+cost_analysis() reports *per-device* numbers on a partitioned module, so
+totals are per-device * chips; the ratios below therefore reduce to
+per-device quantities over per-chip peak rates.  MODEL_FLOPS uses
+6*N*D for training (2*N_active*D per decoded token for decode) and the
+useful ratio MODEL_FLOPS / HLO_FLOPS exposes remat/padding/dispatch
+waste.  The dominant term is the bottleneck the perf loop iterates on.
+
+Usage: python -m benchmarks.roofline [--artifacts artifacts] [--csv]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def analyze(rec: dict) -> dict:
+    """Three terms per the spec formulas.
+
+    flops: analytic accounting (XLA cost_analysis counts while bodies
+    once — verified; see repro.launch.accounting).  bytes: analytic HBM
+    traffic model.  collectives: HLO text with while-trip correction
+    (repro.launch.hlo), a per-device quantity.
+    """
+    chips = rec["chips"]
+    fl_dev = rec["analytic_flops_total"] / chips
+    by_dev = rec["analytic_bytes_per_device"]
+    co_dev = rec.get("collective_bytes_corrected",
+                     rec["collective_bytes_per_device"])["total"]
+    t_c = fl_dev / PEAK_FLOPS
+    t_m = by_dev / HBM_BW
+    t_x = co_dev / ICI_BW
+    dominant = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = rec["model_flops"]
+    useful = mf / rec["analytic_flops_total"] if rec["analytic_flops_total"] else 0.0
+    # roofline fraction: ideal time for useful work / dominant-term time
+    t_star = max(t_c, t_m, t_x)
+    frac = (mf / (chips * PEAK_FLOPS)) / t_star if t_star else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dominant, "model_flops": mf,
+        "useful_ratio": useful, "roofline_frac": frac,
+        "temp_gb": rec["memory"]["temp_gb"],
+    }
+
+
+def load(artifacts: str, mesh: str = "single"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(artifacts, "*.json"))):
+        if path.endswith("summary.json"):
+            continue
+        rec = json.load(open(path))
+        if rec.get("status") != "ok" or rec.get("mesh") != mesh:
+            continue
+        rows.append(analyze(rec))
+    return rows
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--artifacts", default="artifacts")
+    p.add_argument("--mesh", default="single")
+    p.add_argument("--csv", action="store_true")
+    args = p.parse_args(argv)
+    rows = load(args.artifacts, args.mesh)
+    if args.csv:
+        print("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+              "useful_ratio,roofline_frac,temp_gb")
+        for r in rows:
+            print(f"{r['arch']},{r['shape']},{r['mesh']},"
+                  f"{r['compute_s']:.3e},{r['memory_s']:.3e},"
+                  f"{r['collective_s']:.3e},{r['dominant']},"
+                  f"{r['useful_ratio']:.3f},{r['roofline_frac']:.3f},"
+                  f"{r['temp_gb']:.2f}")
+        return 0
+    hdr = (f"{'arch':26s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+           f"{'collect':>10s} {'dom':>10s} {'useful':>7s} {'roofL':>6s} "
+           f"{'temp':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['arch']:26s} {r['shape']:12s} {r['compute_s']:10.3e} "
+              f"{r['memory_s']:10.3e} {r['collective_s']:10.3e} "
+              f"{r['dominant']:>10s} {r['useful_ratio']:7.3f} "
+              f"{r['roofline_frac']:6.3f} {r['temp_gb']:6.1f}G")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,15 @@
+"""Serve a small model with batched requests (continuous batching engine).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main(["--arch", "phi4-mini-3.8b", "--reduced",
+                   "--requests", "12", "--max-new", "24",
+                   "--batch", "4", "--max-seq", "96"]))

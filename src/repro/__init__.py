@@ -1,0 +1,6 @@
+"""repro: GVEL graph loading + multi-pod JAX training/serving framework.
+
+Import note: this top-level module must stay import-light (no jax) so
+launch/dryrun.py can set XLA_FLAGS before jax initializes.
+"""
+__version__ = "1.0.0"

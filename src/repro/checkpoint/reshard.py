@@ -1,0 +1,32 @@
+"""Elastic resharding: restore a checkpoint onto a different mesh.
+
+Checkpoints are mesh-agnostic (full logical arrays), so scaling from N to
+M devices is: build the new mesh, derive shardings for it, restore.  This
+module packages that and validates shard layouts — the path a 1000-node
+job takes when it loses a pod and restarts at reduced width.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+from ..distributed import sharding as shd
+from . import io
+
+
+def reshard_restore(abstract_state, directory: str, cfg, mesh: Mesh, *,
+                    fsdp: bool, step: Optional[int] = None):
+    """Restore train state with shardings derived for ``mesh``."""
+    pspecs = shd.param_shardings(abstract_state.params, cfg, mesh, fsdp=fsdp)
+    mspecs = shd.moment_shardings(abstract_state.params, pspecs, mesh)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..train.state import TrainState
+    sh = TrainState(
+        step=NamedSharding(mesh, P()),
+        params=pspecs, mu=mspecs, nu=mspecs,
+        error=None if abstract_state.error is None else mspecs)
+    state, at_step = io.restore(abstract_state, directory, step, shardings=sh)
+    return state, at_step

@@ -1,0 +1,59 @@
+"""Host-side block planning and staging (GVEL getBlock, TPU-adapted).
+
+The file is cut into uniform beta-byte blocks.  Each block's device buffer
+is `overlap + beta` bytes: `overlap` bytes of left context plus the owned
+range.  Buffers are newline-padded at both file edges so the very first
+byte of the file starts a line and the final line is always terminated —
+the branch-free replacement for GVEL's newline repositioning.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+NEWLINE = 10
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    file_len: int
+    beta: int          # owned bytes per block (GVEL: 256 KiB)
+    overlap: int       # left context >= max line length
+    num_blocks: int
+    buf_len: int       # overlap + beta
+
+    @property
+    def edge_cap(self) -> int:
+        # min parsable line is 4 bytes ("1 2\n"); +2 slack
+        return self.buf_len // 4 + 2
+
+
+def plan_blocks(file_len: int, beta: int = 256 * 1024, overlap: int = 64) -> BlockPlan:
+    if beta <= overlap:
+        raise ValueError(f"beta ({beta}) must exceed overlap ({overlap})")
+    num_blocks = max(1, -(-file_len // beta))
+    return BlockPlan(file_len, beta, overlap, num_blocks, overlap + beta)
+
+
+def stage_blocks(data: np.ndarray, plan: BlockPlan, block_ids: np.ndarray) -> np.ndarray:
+    """Gather block buffers (with left overlap) into an (nb, buf_len) array.
+
+    ``data`` is the memory-mapped file bytes (uint8).  Out-of-file regions
+    (before byte 0, after EOF) are filled with newlines.
+    """
+    nb = len(block_ids)
+    out = np.full((nb, plan.buf_len), NEWLINE, np.uint8)
+    n = plan.file_len
+    for row, b in enumerate(np.asarray(block_ids)):
+        lo = int(b) * plan.beta - plan.overlap
+        hi = int(b) * plan.beta + plan.beta
+        s, e = max(lo, 0), min(hi, n)
+        if e > s:
+            out[row, s - lo : e - lo] = data[s:e]
+    return out
+
+
+def owned_range(plan: BlockPlan) -> tuple[int, int]:
+    """Buffer-local [start, end) of the owned byte range (uniform per block)."""
+    return plan.overlap, plan.overlap + plan.beta

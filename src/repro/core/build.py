@@ -1,0 +1,192 @@
+"""Edgelist -> CSR construction strategies (GVEL §4.2.3-4.2.4, TPU-adapted).
+
+There is no fetch-add on TPU, so PIGO's "claim a slot atomically" becomes a
+deterministic *rank*: edge e with source u lands at offsets[u] + (rank of e
+among u's edges).  Ranks come from a stable sort, which makes construction
+a pure gather/scatter with provably disjoint destinations.
+
+* ``csr_global``    — one global stable sort over all edges
+                      (single-stage; the PIGO-shaped baseline).
+* ``csr_staged``    — GVEL's multi-stage build: edges are cut into rho
+                      contiguous partitions; each partition sorts locally
+                      (smaller sorts, independent -> parallel across cores
+                      or devices) and is merged into the global CSR through
+                      per-partition base offsets.  Stage-local work is
+                      contention-free; only the merge touches shared state,
+                      and its destinations are disjoint by construction.
+
+Fixed-capacity buffers use src == -1 as padding; padding sorts to the end
+(key |V|) and is dropped by capacity slicing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .types import CSR
+
+I32 = jnp.int32
+
+
+def _rank_in_group(sorted_key: jax.Array, num_vertices: int) -> jax.Array:
+    """rank of each sorted element within its equal-key run."""
+    first = jnp.searchsorted(sorted_key, jnp.arange(num_vertices + 1, dtype=I32),
+                             side="left")
+    return jnp.arange(sorted_key.shape[0], dtype=I32) - first[
+        jnp.clip(sorted_key, 0, num_vertices)]
+
+
+@functools.partial(jax.jit, static_argnames=("num_vertices", "weighted"))
+def csr_global(
+    src: jax.Array,
+    dst: jax.Array,
+    weights: Optional[jax.Array],
+    num_vertices: int,
+    *,
+    weighted: bool = False,
+) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+    """Single-stage build: one global stable sort (baseline)."""
+    v = num_vertices
+    key = jnp.where(src >= 0, src, v).astype(I32)
+    order = jnp.argsort(key, stable=True)
+    targets = dst[order]
+    w = weights[order] if weighted else None
+    deg = jnp.zeros((v,), I32).at[key].add(1, mode="drop")
+    offsets = jnp.concatenate([jnp.zeros((1,), I32), jnp.cumsum(deg, dtype=I32)])
+    return offsets, targets, w
+
+
+@functools.partial(jax.jit, static_argnames=("num_vertices", "rho", "weighted"))
+def csr_staged(
+    src: jax.Array,
+    dst: jax.Array,
+    weights: Optional[jax.Array],
+    num_vertices: int,
+    *,
+    rho: int = 4,
+    weighted: bool = False,
+) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+    """GVEL multi-stage build (Algorithm 2, rank-based).
+
+    Stage 1: rho contiguous edge partitions, each locally sorted by source
+             -> rho partition CSRs (vmapped: independent work).
+    Stage 2: partition degrees -> global offsets + per-partition bases;
+             every partition edge's destination =
+             offsets[u] + (edges of u in earlier partitions) + local rank.
+    The scatter destinations are disjoint, so the merge is race-free.
+    """
+    v = num_vertices
+    e = src.shape[0]
+    pcap = -(-e // rho)
+    pad = rho * pcap - e
+    key = jnp.where(src >= 0, src, v).astype(I32)
+    if pad:
+        key = jnp.concatenate([key, jnp.full((pad,), v, I32)])
+        dst = jnp.concatenate([dst, jnp.full((pad,), -1, I32)])
+        if weighted:
+            weights = jnp.concatenate([weights, jnp.zeros((pad,), weights.dtype)])
+    key = key.reshape(rho, pcap)
+    dstp = dst.reshape(rho, pcap)
+    wp = weights.reshape(rho, pcap) if weighted else None
+
+    # ---- stage 1: partition-local sorts (independent, parallelizable) ----
+    if wp is None:
+        wp = jnp.zeros_like(key, jnp.float32)   # dummy; DCE'd when unweighted
+
+    def local(keys, dsts, ws):
+        order = jnp.argsort(keys, stable=True)
+        skey = keys[order]
+        deg = jnp.zeros((v,), I32).at[skey].add(1, mode="drop")
+        rank = _rank_in_group(skey, v)
+        return skey, dsts[order], deg, rank, ws[order]
+
+    skey, sdst, pdeg, rank, sw = jax.vmap(local)(key, dstp, wp)
+
+    # ---- stage 2: global offsets + disjoint merge -------------------------
+    deg = jnp.sum(pdeg, axis=0, dtype=I32)                       # (V,)
+    offsets = jnp.concatenate([jnp.zeros((1,), I32), jnp.cumsum(deg, dtype=I32)])
+    before = jnp.cumsum(pdeg, axis=0, dtype=I32) - pdeg          # (rho, V) excl
+    base = offsets[:-1][None, :] + before                        # (rho, V)
+    dest = jnp.take_along_axis(base, jnp.clip(skey, 0, v - 1), axis=1) + rank
+    dest = jnp.where(skey < v, dest, e)                          # drop padding
+    targets = jnp.full((e,), -1, I32).at[dest.reshape(-1)].set(
+        sdst.reshape(-1), mode="drop")
+    w = None
+    if weighted:
+        w = jnp.zeros((e,), weights.dtype).at[dest.reshape(-1)].set(
+            sw.reshape(-1), mode="drop")
+    return offsets, targets, w
+
+
+def csr_staged_np(src: np.ndarray, dst: np.ndarray,
+                  weights: Optional[np.ndarray], num_vertices: int, *,
+                  rho: int = 4, num_workers: int = 1) -> CSR:
+    """Host (numpy) staged build with a thread pool over partitions —
+    the multicore realization of Algorithm 2: partition-local sorts run
+    on separate cores (numpy sort releases the GIL), then the disjoint
+    merge scatters in parallel."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    v = num_vertices
+    e = len(src)
+    cuts = np.linspace(0, e, rho + 1).astype(np.int64)
+
+    def local(p):
+        s = src[cuts[p]:cuts[p + 1]]
+        d = dst[cuts[p]:cuts[p + 1]]
+        order = np.argsort(s, kind="stable")
+        skey = s[order]
+        deg = np.bincount(skey, minlength=v)
+        w = weights[cuts[p]:cuts[p + 1]][order] if weights is not None else None
+        return skey, d[order], deg, w
+
+    if num_workers == 1:
+        parts = [local(p) for p in range(rho)]
+    else:
+        with ThreadPoolExecutor(num_workers) as pool:
+            parts = list(pool.map(local, range(rho)))
+
+    pdeg = np.stack([p[2] for p in parts])                 # (rho, V)
+    deg = pdeg.sum(axis=0)
+    offsets = np.zeros(v + 1, np.int64)
+    np.cumsum(deg, out=offsets[1:])
+    before = np.cumsum(pdeg, axis=0) - pdeg                # (rho, V) excl
+    targets = np.empty(e, np.int32)
+    wout = np.empty(e, np.float32) if weights is not None else None
+
+    def merge(p):
+        skey, sdst, pdg, w = parts[p]
+        local_off = np.zeros(v + 1, np.int64)
+        np.cumsum(pdg, out=local_off[1:])
+        rank = np.arange(len(skey)) - local_off[skey]
+        dest = offsets[skey] + before[p][skey] + rank
+        targets[dest] = sdst
+        if wout is not None:
+            wout[dest] = w
+
+    if num_workers == 1:
+        for p in range(rho):
+            merge(p)
+    else:
+        with ThreadPoolExecutor(num_workers) as pool:
+            list(pool.map(merge, range(rho)))
+    return CSR(offsets, targets, wout, v)
+
+
+def csr_np(src: np.ndarray, dst: np.ndarray, weights: Optional[np.ndarray],
+           num_vertices: int) -> CSR:
+    """Host oracle: numpy stable sort."""
+    m = src >= 0
+    src, dst = src[m], dst[m]
+    weights = weights[m] if weights is not None else None
+    order = np.argsort(src, kind="stable")
+    deg = np.bincount(src, minlength=num_vertices)
+    offsets = np.zeros(num_vertices + 1, np.int64)
+    np.cumsum(deg, out=offsets[1:])
+    return CSR(offsets, dst[order].astype(np.int32),
+               None if weights is None else weights[order],
+               num_vertices)

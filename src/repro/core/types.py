@@ -1,0 +1,120 @@
+"""Core data types for the GVEL graph-loading substrate.
+
+EdgeList and CSR are registered pytrees so they flow through jit/shard_map.
+Vertex ids are int32 (|V| < 2**31); shard-local edge counts are int32;
+*global* offsets that may exceed 2**31 live on host as numpy int64.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EdgeList:
+    """COO edges. ``weights`` is None for unweighted graphs.
+
+    ``num_edges`` may be a traced scalar (valid prefix length) when the
+    arrays are fixed-capacity buffers, mirroring GVEL's over-allocation.
+    """
+
+    src: Any                      # (E_cap,) int32
+    dst: Any                      # (E_cap,) int32
+    weights: Optional[Any]        # (E_cap,) float32 or None
+    num_edges: Any                # () int32 — valid prefix
+    num_vertices: int             # static
+
+    def tree_flatten(self):
+        leaves = (self.src, self.dst, self.weights, self.num_edges)
+        return leaves, (self.num_vertices,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        src, dst, weights, num_edges = leaves
+        return cls(src, dst, weights, num_edges, aux[0])
+
+    @property
+    def capacity(self) -> int:
+        return self.src.shape[0]
+
+    def materialize(self) -> "EdgeList":
+        """Trim buffers to the valid prefix (host-side)."""
+        n = int(self.num_edges)
+        w = None if self.weights is None else np.asarray(self.weights[:n])
+        return EdgeList(np.asarray(self.src[:n]), np.asarray(self.dst[:n]), w,
+                        np.int64(n), self.num_vertices)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CSR:
+    """Compressed sparse row adjacency.
+
+    offsets[u] .. offsets[u+1] index into targets/weights for vertex u.
+    For shard-local CSRs, ``row_start`` records the first global vertex id
+    owned by this shard (vertex-partitioned layout).
+    """
+
+    offsets: Any                  # (V_local + 1,) int32/int64
+    targets: Any                  # (E_local,) int32
+    weights: Optional[Any]        # (E_local,) float32 or None
+    num_vertices: int             # global |V| (static)
+    row_start: int = 0            # first owned vertex (static)
+
+    def tree_flatten(self):
+        return (self.offsets, self.targets, self.weights), (self.num_vertices, self.row_start)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        offsets, targets, weights = leaves
+        return cls(offsets, targets, weights, aux[0], aux[1])
+
+    @property
+    def num_rows(self) -> int:
+        return self.offsets.shape[0] - 1
+
+    def degree(self, u) -> Any:
+        return self.offsets[u + 1] - self.offsets[u]
+
+    def neighbors(self, u):
+        lo, hi = int(self.offsets[u]), int(self.offsets[u + 1])
+        return self.targets[lo:hi]
+
+    def degrees(self) -> Any:
+        return self.offsets[1:] - self.offsets[:-1]
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphMeta:
+    """Header information for a graph file."""
+
+    num_vertices: int
+    num_edges: int                # as declared (pre symmetric expansion)
+    weighted: bool
+    symmetric: bool
+    base: int = 1                 # vertex-id base in the file (MTX is 1-based)
+    pattern: bool = False         # MTX 'pattern' — no weight column
+
+
+def csr_from_dense(adj: np.ndarray) -> CSR:
+    """Reference CSR from a dense adjacency count matrix (tests only)."""
+    adj = np.asarray(adj)
+    v = adj.shape[0]
+    deg = adj.sum(axis=1).astype(np.int64)
+    offsets = np.zeros(v + 1, np.int64)
+    np.cumsum(deg, out=offsets[1:])
+    targets = np.repeat(
+        np.tile(np.arange(v), v), adj.reshape(-1).astype(np.int64)
+    ) if adj.size else np.zeros(0, np.int64)
+    # np.repeat over tiled columns: rebuild row-major properly
+    cols = []
+    for u in range(v):
+        row = np.repeat(np.arange(v), adj[u])
+        cols.append(row)
+    targets = np.concatenate(cols) if cols else np.zeros(0, np.int64)
+    return CSR(offsets, targets.astype(np.int32), None, v)

@@ -1,0 +1,55 @@
+"""Async double-buffered batch pipeline.
+
+The host-side analogue of GVEL's madvise read-ahead: while the device
+runs step n, a background thread builds (and device_puts) batch n+1, so
+input never serializes with compute.  Step-indexed sources keep restart
+deterministic.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Optional
+
+import jax
+
+
+class Prefetcher:
+    """Wraps source(step)->batch with a lookahead thread."""
+
+    def __init__(self, source: Callable[[int], dict], start_step: int = 0,
+                 lookahead: int = 2, sharding=None):
+        self.source = source
+        self.sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=lookahead)
+        self._stop = threading.Event()
+        self._next = start_step
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+
+    def _work(self):
+        step = self._next
+        while not self._stop.is_set():
+            batch = self.source(step)
+            if self.sharding is not None:
+                batch = jax.device_put(batch, self.sharding)
+            try:
+                self._q.put((step, batch), timeout=0.2)
+                step += 1
+            except queue.Full:
+                continue
+
+    def get(self, expect_step: Optional[int] = None):
+        step, batch = self._q.get()
+        if expect_step is not None and step != expect_step:
+            raise RuntimeError(f"pipeline desync: got {step}, want {expect_step}")
+        return batch
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

@@ -1,0 +1,26 @@
+"""Deterministic synthetic LM batches (step-indexed for restart replay)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def synthetic_batch(cfg, batch: int, seq: int, step: int):
+    """Pure function of (config, step): restart at step n replays exactly."""
+    key = jax.random.fold_in(jax.random.key(1234), step)
+    out = {}
+    if cfg.embed_stub:
+        k1, k2 = jax.random.split(key)
+        out["frames"] = jax.random.normal(k1, (batch, seq, cfg.d_model),
+                                          jnp.float32)
+        out["labels"] = jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size)
+        return out
+    k1, k2 = jax.random.split(key)
+    toks = jax.random.randint(k1, (batch, seq + 1), 0, cfg.vocab_size)
+    out["tokens"] = toks[:, :-1]
+    out["labels"] = toks[:, 1:]
+    if cfg.num_image_tokens:
+        out["image_embeds"] = jax.random.normal(
+            k2, (batch, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+    return out

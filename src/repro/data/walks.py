@@ -1,0 +1,51 @@
+"""Random-walk corpus over a GVEL-loaded CSR -> LM token sequences.
+
+The end-to-end integration of the paper's technique with the training
+substrate: text edgelist --GVEL--> CSR --vectorized walker--> token
+batches.  Each walk step is two gathers (offsets, then a uniformly
+sampled neighbor); dead ends teleport.  Vertex ids map to tokens modulo
+the model vocab.  Pure function of (csr, step) — deterministic restart.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+I32 = jnp.int32
+
+
+@functools.partial(jax.jit, static_argnames=("num_walks", "length", "num_vertices"))
+def random_walks(offsets, targets, key, *, num_walks: int, length: int,
+                 num_vertices: int):
+    """-> (num_walks, length) int32 vertex sequences."""
+    k0, key = jax.random.split(key)
+    cur = jax.random.randint(k0, (num_walks,), 0, num_vertices, I32)
+
+    def step(carry, k):
+        cur = carry
+        lo = offsets[cur]
+        deg = offsets[cur + 1] - lo
+        kk, kt = jax.random.split(k)
+        r = jax.random.randint(kk, (num_walks,), 0, jnp.maximum(deg, 1), I32)
+        nxt = targets[jnp.clip(lo + r, 0, targets.shape[0] - 1)]
+        tele = jax.random.randint(kt, (num_walks,), 0, num_vertices, I32)
+        nxt = jnp.where(deg > 0, nxt, tele)
+        return nxt, cur
+
+    keys = jax.random.split(key, length)
+    _, seq = jax.lax.scan(step, cur, keys)
+    return seq.T                                   # (num_walks, length)
+
+
+def walk_batch(csr, cfg, batch: int, seq: int, step: int):
+    """Training batch from walks: tokens = vertex ids mod vocab."""
+    offsets = jnp.asarray(np.asarray(csr.offsets), I32)
+    targets = jnp.asarray(np.asarray(csr.targets), I32)
+    key = jax.random.fold_in(jax.random.key(99), step)
+    walks = random_walks(offsets, targets, key, num_walks=batch,
+                         length=seq + 1, num_vertices=csr.num_vertices)
+    toks = (walks % cfg.vocab_size).astype(I32)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

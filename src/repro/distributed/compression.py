@@ -1,0 +1,93 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+For DP all-reduce at 1000-node scale the gradient volume dominates the
+interconnect; int8 + error feedback (1-bit-Adam-family result) preserves
+convergence while cutting wire bytes 4x vs f32 / 2x vs bf16.
+
+Two entry points:
+  * quantize/dequantize + error feedback buffers — composed into the
+    optimizer step (the simulation path used on this host; convergence
+    parity is tested).
+  * compressed_psum — a shard_map collective that all-reduces the int8
+    payload (+ per-tensor scales) instead of the raw values; this is the
+    deployment path, expressed with jax.lax collectives so XLA schedules
+    it like any other reduce.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads, error_buf):
+    """grads + carried error -> (dequantized grads, new error)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_buf)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(tree, [o[0] for o in out])
+    new_e = jax.tree.unflatten(tree, [o[1] for o in out])
+    return new_g, new_e
+
+
+def init_error_buf(abstract_grads):
+    return jax.tree.map(lambda l: jnp.zeros(l.shape, jnp.float32),
+                        abstract_grads)
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """Reference semantics for a quantized all-reduce (shard_map body):
+    each shard's contribution passes through int8 quantization before the
+    sum.  The psum itself runs dequantized — use ``compressed_allreduce``
+    for the wire-efficient schedule; this form exists to test accuracy of
+    the quantization in isolation from the collective layout."""
+    q, s = quantize_int8(x)
+    return jax.lax.psum(dequantize_int8(q, s), axis_name)
+
+
+def compressed_allreduce(x: jax.Array, axis_name: str, n: int) -> jax.Array:
+    """Wire-efficient int8 all-reduce: reduce-scatter as an int8
+    all_to_all, sum locally in f32, then all_gather the int8 result.
+
+    Wire bytes ~ 2 * P/4 vs 2 * P for an f32 all-reduce: a 4x cut, which
+    is the whole point of gradient compression at pod scale.  Accuracy:
+    two int8 quantizations (send + result) with per-shard scales.
+    """
+    shape = x.shape
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    seg = flat.reshape(n, -1)
+    q, s = quantize_int8(seg)                       # one scale per device
+    # every device receives the n shards of its segment
+    shards = jax.lax.all_to_all(q, axis_name, 0, 0)      # (n, seg) int8
+    scales = jax.lax.all_gather(s, axis_name)            # (n,)
+    summed = jnp.sum(shards.astype(jnp.float32)
+                     * scales.reshape(n, *([1] * (q.ndim - 1))), axis=0)
+    q2, s2 = quantize_int8(summed)
+    out = jax.lax.all_gather(q2, axis_name).astype(jnp.float32)  # (n, seg)
+    s2g = jax.lax.all_gather(s2, axis_name)
+    out = out * s2g.reshape(n, *([1] * (out.ndim - 1)))
+    out = out.reshape(-1)
+    if pad:
+        out = out[:-pad]
+    return out.reshape(shape)

@@ -1,0 +1,188 @@
+"""Sharding rules: logical param roles -> PartitionSpecs on the mesh.
+
+Mesh axes: ("pod", "data", "model") multi-pod / ("data", "model") single.
+  * "model" carries TP (padded Q heads, d_ff, d_inner, experts-when-divisible)
+  * ("pod","data") carry DP; FSDP_ARCHS additionally shard big weight
+    matrices over them (weights too large for 16 GB chips under pure TP)
+  * optimizer moments get ZeRO-1 sharding over the DP axes on top of the
+    param spec (first still-replicated divisible dim).
+
+Rules dispatch on (leaf name, rank); scanned segment stacks get a leading
+None for the layer dim.  Every rule degrades to replication when a dim is
+not divisible by its axis product — correctness never depends on layout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _maybe(mesh: Mesh, axes, dim: int):
+    """axes if dim divides evenly, else None (replicate)."""
+    if axes is None or dim % _axsize(mesh, axes) != 0:
+        return None
+    return axes
+
+
+def batch_axes(mesh: Mesh, batch: int):
+    """Largest prefix-combination of DP axes that divides the batch."""
+    cands = []
+    if "pod" in mesh.shape:
+        cands.append(("pod", "data"))
+    cands.append(("data",))
+    for c in cands:
+        if batch % _axsize(mesh, c) == 0:
+            return c
+    return None
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def param_pspec(path: Tuple[str, ...], shape: Tuple[int, ...], cfg, mesh: Mesh,
+                *, fsdp: bool) -> P:
+    name = path[-1]
+    stacked = any(p.startswith("seg") for p in path)
+    rank = len(shape) - (1 if stacked else 0)
+    dims = shape[1:] if stacked else shape
+    tp = "model"
+    fa = dp_axes(mesh) if fsdp else None
+    mb = functools.partial(_maybe, mesh)
+
+    def spec(*parts):
+        parts = tuple(parts)
+        assert len(parts) == rank, (path, shape, parts)
+        return P(*(((None,) if stacked else ()) + parts))
+
+    if name == "embed":
+        return P(mb(tp, shape[0]), mb(fa, shape[1]))
+    if rank == 1:   # norms, biases, lam, D
+        big = dims[0] >= 1024
+        return spec(mb(tp, dims[0]) if big and name in ("conv_b", "dt_bias",
+                                                        "D", "lam") else None)
+    if name == "wq":
+        return spec(mb(fa, dims[0]), mb(tp, dims[1]), None)
+    if name in ("wk", "wv"):
+        return spec(mb(fa, dims[0]), mb(tp, dims[1]), None)
+    if name == "wo":
+        return spec(mb(tp, dims[0]), None, mb(fa, dims[2]))
+    if name in ("w_in", "w_gate") and rank == 2:
+        return spec(mb(fa, dims[0]), mb(tp, dims[1]))
+    if name == "w_out" and rank == 2:
+        return spec(mb(tp, dims[0]), mb(fa, dims[1]))
+    if name == "router":
+        return spec(mb(fa, dims[0]), None)
+    if name in ("w_in", "w_gate") and rank == 3:   # moe (E, D, F)
+        if mb(tp, dims[0]) is not None:            # expert parallel
+            return spec(tp, mb(fa, dims[1]), None)
+        return spec(None, mb(fa, dims[1]), mb(tp, dims[2]))
+    if name == "w_out" and rank == 3:              # moe (E, F, D)
+        if mb(tp, dims[0]) is not None:
+            return spec(tp, None, mb(fa, dims[2]))
+        return spec(None, mb(tp, dims[1]), mb(fa, dims[2]))
+    if name == "in_proj":                          # (D, 2*inner)
+        return spec(mb(fa, dims[0]), mb(tp, dims[1]))
+    if name == "out_proj":                         # (inner, D)
+        return spec(mb(tp, dims[0]), mb(fa, dims[1]))
+    if name == "conv_w":                           # (k, inner)
+        return spec(None, mb(tp, dims[1]))
+    if name == "x_proj":                           # (inner, dt_rank+2N)
+        return spec(mb(tp, dims[0]), None)
+    if name == "dt_proj":                          # (dt_rank, inner)
+        return spec(None, mb(tp, dims[1]))
+    if name == "A_log":                            # (inner, N)
+        return spec(mb(tp, dims[0]), None)
+    if name in ("wr", "wi"):                       # (W, W) row-parallel
+        return spec(mb(tp, dims[0]), None)
+    return spec(*([None] * rank))
+
+
+def param_shardings(abstract_params, cfg, mesh: Mesh, *, fsdp: bool):
+    def one(path, leaf):
+        names = tuple(str(getattr(k, "key", k)) for k in path)
+        return NamedSharding(mesh, param_pspec(names, leaf.shape, cfg, mesh,
+                                               fsdp=fsdp))
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def zero1_pspec(pspec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """ZeRO-1: shard the first still-replicated divisible dim over DP
+    (skipped if the param spec already consumes a DP axis, e.g. FSDP)."""
+    da = dp_axes(mesh)
+    size = _axsize(mesh, da)
+    parts = list(pspec) + [None] * (len(shape) - len(pspec))
+    used = set()
+    for p in parts:
+        for a in (p if isinstance(p, tuple) else (p,)):
+            used.add(a)
+    if any(a in used for a in da):
+        return P(*parts)
+    for i, (p, d) in enumerate(zip(parts, shape)):
+        if p is None and d % size == 0 and d >= size:
+            parts[i] = da
+            return P(*parts)
+    return P(*parts)
+
+
+def moment_shardings(abstract_params, param_shardings_tree, mesh: Mesh):
+    def one(leaf, sh):
+        return NamedSharding(mesh, zero1_pspec(sh.spec, leaf.shape, mesh))
+    return jax.tree.map(one, abstract_params, param_shardings_tree)
+
+
+# ---- activations / batches ---------------------------------------------------
+
+def batch_pspec(mesh: Mesh, batch: int, rank: int) -> P:
+    ba = batch_axes(mesh, batch)
+    return P(*((ba,) + (None,) * (rank - 1)))
+
+
+def batch_shardings(mesh: Mesh, abstract_batch):
+    def one(leaf):
+        return NamedSharding(mesh, batch_pspec(mesh, leaf.shape[0], leaf.ndim))
+    return jax.tree.map(one, abstract_batch)
+
+
+def cache_pspec(path: Tuple[str, ...], shape, cfg, mesh: Mesh) -> P:
+    """Cache layout: batch over DP axes; mamba/rglru inner dim over model.
+    Leading dim is the stacked layer axis (None)."""
+    name = path[-1]
+    dims = shape[1:]            # drop layer-stack dim
+    b = dims[0] if dims else 1
+    ba = batch_axes(mesh, b)
+    mb = functools.partial(_maybe, mesh)
+    if name in ("k", "v"):
+        # (B, S_cache, K, hd): prefer sharding KV heads over "model";
+        # fall back to sequence-sharding the cache (distributed softmax
+        # is GSPMD-native: reductions over the sharded S dim become small
+        # psums) so 32k caches never replicate across TP.
+        if mb("model", dims[2]) is not None:
+            return P(None, ba, None, "model", None)
+        return P(None, ba, mb("model", dims[1]), None, None)
+    if name == "conv":
+        return P(None, ba, None, mb("model", dims[2]))
+    if name == "ssm":
+        return P(None, ba, mb("model", dims[1]), None)
+    if name == "h":
+        return P(None, ba, mb("model", dims[1]))
+    return P(*([None] * len(shape)))
+
+
+def cache_shardings(abstract_caches, cfg, mesh: Mesh):
+    def one(path, leaf):
+        names = tuple(str(getattr(k, "key", k)) for k in path)
+        return NamedSharding(mesh, cache_pspec(names, leaf.shape, cfg, mesh))
+    return jax.tree_util.tree_map_with_path(one, abstract_caches)

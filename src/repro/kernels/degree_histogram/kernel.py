@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: contention-free vertex-degree histogram.
+
+The TPU adaptation of GVEL's rho-partitioned atomic degree counting.
+TPUs have no atomics; the native contention-free reduction is
+broadcast-compare-and-sum: for a tile of vertices [v0, v0+VT) and a block
+of E_BLK edge sources, build the (E_BLK, VT) match matrix and sum over
+edges.  Every (edge-block, vertex-tile) grid cell is independent work —
+the role GVEL's partitions play — and accumulation over edge blocks uses
+the sequential-grid revisiting pattern (`o_ref +=`), which is race-free
+on TPU because the grid is executed in order.
+
+Cost is O(E * V / lane-width) compares, so the production pipeline
+radix-buckets edges by vertex range first (the staged build) and runs
+this kernel per bucket where V_local is a few thousand; within a bucket
+it beats scatter because it is pure VPU compare/add with zero memory
+conflicts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+I32 = jnp.int32
+
+
+def _hist_body(src_ref, o_ref, *, vt: int):
+    i = pl.program_id(0)           # edge-block index (accumulation dim)
+    j = pl.program_id(1)           # vertex-tile index
+    e_blk = src_ref.shape[-1]
+    src = src_ref[0, :]                              # (E_BLK,)
+    v0 = j * vt
+    lanes = jax.lax.iota(I32, vt) + v0               # (VT,)
+    match = (src[:, None] == lanes[None, :])         # (E_BLK, VT) — VPU compare
+    partial = jnp.sum(match.astype(I32), axis=0)     # (VT,)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0, :] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("num_vertices", "e_blk", "vt",
+                                             "interpret"))
+def degree_histogram_kernel(src: jax.Array, *, num_vertices: int,
+                            e_blk: int = 2048, vt: int = 512,
+                            interpret: bool = True) -> jax.Array:
+    """src: (E,) int32 (pad = -1) -> degrees (num_vertices,) int32."""
+    e = src.shape[0]
+    pe = max(-(-e // e_blk) * e_blk, e_blk)   # at least one block (E may be 0)
+    pv = -(-num_vertices // vt) * vt
+    if pe != e:
+        src = jnp.concatenate([src, jnp.full((pe - e,), -1, I32)])
+    src2 = src.reshape(pe // e_blk, e_blk)
+    grid = (pe // e_blk, pv // vt)
+    out = pl.pallas_call(
+        functools.partial(_hist_body, vt=vt),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, e_blk), lambda i, j: (i, 0))],
+        out_specs=pl.BlockSpec((1, vt), lambda i, j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, pv), I32),
+        interpret=interpret,
+    )(src2)
+    return out[0, :num_vertices]

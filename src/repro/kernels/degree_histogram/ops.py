@@ -1,0 +1,14 @@
+"""Jit'd public wrapper for the degree_histogram Pallas kernel."""
+from __future__ import annotations
+
+from .kernel import degree_histogram_kernel
+from .ref import degree_histogram_ref
+
+
+def degree_histogram(src, *, num_vertices: int, e_blk: int = 2048,
+                     vt: int = 512, use_kernel: bool = True,
+                     interpret: bool = True):
+    if use_kernel:
+        return degree_histogram_kernel(src, num_vertices=num_vertices,
+                                       e_blk=e_blk, vt=vt, interpret=interpret)
+    return degree_histogram_ref(src, num_vertices=num_vertices)

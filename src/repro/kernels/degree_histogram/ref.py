@@ -1,0 +1,8 @@
+"""Pure-jnp oracle: scatter-add degree count (repro.core.degrees)."""
+from __future__ import annotations
+
+from ...core.degrees import degrees_global
+
+
+def degree_histogram_ref(src, *, num_vertices: int):
+    return degrees_global(src, num_vertices)

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: exclusive scan (degrees -> CSR offsets).
+
+GVEL computes CSR offsets with `exclusiveScan` (Alg. 2 lines 7/27).  On
+TPU the scan is hierarchical: the sequential grid walks V in blocks; each
+step cumsums its block in VMEM and adds the running carry.  The carry
+lives in a revisited (1,1) output block — grid steps execute in order on
+a TPU core, so read-modify-write across steps is race-free (the same
+idiom the histogram kernel uses to accumulate).  This replaces a
+multicore two-phase upsweep/downsweep scan and touches the data exactly
+once (memory-bound optimal).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+I32 = jnp.int32
+
+
+def _scan_body(x_ref, o_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[0, 0] = jnp.zeros((), I32)
+
+    x = x_ref[0, :]
+    c = carry_ref[0, 0]
+    incl = jnp.cumsum(x)
+    o_ref[0, :] = c + incl - x          # exclusive
+    carry_ref[0, 0] = c + incl[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("blk", "interpret"))
+def exclusive_scan_kernel(x: jax.Array, *, blk: int = 1024,
+                          interpret: bool = True):
+    """x: (N,) int32 -> (exclusive prefix sums (N,), total ()).
+
+    The total is the scan carry — callers append it to form CSR offsets
+    of length V+1 without a second reduction pass.
+    """
+    n = x.shape[0]
+    pn = -(-n // blk) * blk
+    if pn != n:
+        x = jnp.concatenate([x, jnp.zeros((pn - n,), x.dtype)])
+    x2 = x.reshape(pn // blk, blk)
+    out, carry = pl.pallas_call(
+        _scan_body,
+        grid=(pn // blk,),
+        in_specs=[pl.BlockSpec((1, blk), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((1, blk), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),   # revisited carry cell
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((pn // blk, blk), I32),
+            jax.ShapeDtypeStruct((1, 1), I32),
+        ),
+        interpret=interpret,
+    )(x2)
+    return out.reshape(-1)[:n], carry[0, 0]

@@ -1,0 +1,22 @@
+"""Jit'd public wrapper for the exclusive_scan Pallas kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import exclusive_scan_kernel
+from .ref import exclusive_scan_ref
+
+
+def exclusive_scan(x, *, blk: int = 1024, use_kernel: bool = True,
+                   interpret: bool = True):
+    if use_kernel:
+        return exclusive_scan_kernel(x, blk=blk, interpret=interpret)
+    return exclusive_scan_ref(x)
+
+
+def csr_offsets(degrees, *, blk: int = 1024, use_kernel: bool = True,
+                interpret: bool = True):
+    """degrees (V,) -> offsets (V+1,) via the scan kernel."""
+    excl, total = exclusive_scan(degrees, blk=blk, use_kernel=use_kernel,
+                                 interpret=interpret)
+    return jnp.concatenate([excl, total[None]])

@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for the neighbor_gather Pallas kernel."""
+from __future__ import annotations
+
+from .kernel import neighbor_gather_kernel
+from .ref import neighbor_gather_ref
+
+
+def neighbor_gather(vertices, offsets, targets, *, width: int = 128,
+                    bt: int = 256, use_kernel: bool = True,
+                    interpret: bool = True):
+    if targets.shape[0] < width:       # tiny graphs: pad so the fixed-width
+        import jax.numpy as jnp        # window slice is always in bounds
+        pad = width - targets.shape[0]
+        targets = jnp.concatenate(
+            [targets, jnp.full((pad,), -1, targets.dtype)])
+    if use_kernel:
+        return neighbor_gather_kernel(vertices, offsets, targets, width=width,
+                                      bt=bt, interpret=interpret)
+    return neighbor_gather_ref(vertices, offsets, targets, width=width)

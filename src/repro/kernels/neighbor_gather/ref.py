@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for neighbor_gather: vectorized dynamic-slice gather."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+I32 = jnp.int32
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def neighbor_gather_ref(vertices, offsets, targets, *, width: int = 128):
+    if targets.shape[0] < width:     # tiny graphs: keep window in bounds
+        targets = jnp.concatenate(
+            [targets, jnp.full((width - targets.shape[0],), -1,
+                               targets.dtype)])
+    e = targets.shape[0]
+
+    def one(u):
+        lo = offsets[u]
+        hi = offsets[u + 1]
+        deg = hi - lo
+        start = jnp.minimum(lo, jnp.maximum(e - width, 0))
+        row = jax.lax.dynamic_slice(targets, (start,), (width,))
+        lane = jnp.arange(width, dtype=I32)
+        shifted = lo - start
+        valid = (lane >= shifted) & (lane < shifted + jnp.minimum(deg, width))
+        row = jnp.roll(row, -shifted)
+        valid = jnp.roll(valid, -shifted)
+        return jnp.where(valid, row, -1), deg
+
+    return jax.vmap(one)(vertices)

@@ -1,0 +1,4 @@
+from .ops import parse_edges
+from .ref import parse_edges_ref
+
+__all__ = ["parse_edges", "parse_edges_ref"]

@@ -1,0 +1,26 @@
+"""Jit'd public wrapper for the parse_edges Pallas kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import parse_edges_kernel
+from .ref import parse_edges_ref
+
+
+def parse_edges(bufs, owned_start: int, owned_end: int, *, weighted: bool = False,
+                base: int = 1, edge_cap: int | None = None,
+                use_kernel: bool = True, interpret: bool = True):
+    """Parse (nb, buf_len) text blocks -> (src, dst, w, counts).
+
+    use_kernel=False falls back to the pure-jnp oracle (the XLA path used
+    when Mosaic dynamic-scatter support is unavailable).
+    """
+    nb, buf_len = bufs.shape
+    if edge_cap is None:
+        edge_cap = buf_len // 4 + 2
+    owned = jnp.asarray([owned_start, owned_end], jnp.int32)
+    if use_kernel:
+        return parse_edges_kernel(bufs, owned, weighted=weighted, base=base,
+                                  edge_cap=edge_cap, interpret=interpret)
+    return parse_edges_ref(bufs, owned, weighted=weighted, base=base,
+                           edge_cap=edge_cap)

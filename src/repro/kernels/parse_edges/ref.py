@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the parse_edges kernel: repro.core.parse.parse_blocks."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.parse import parse_blocks
+
+
+def parse_edges_ref(bufs, owned, *, weighted: bool, base: int, edge_cap: int,
+                    max_digits: int = 9):
+    nb = bufs.shape[0]
+    os_ = jnp.full((nb,), owned[0], jnp.int32)
+    oe = jnp.full((nb,), owned[1], jnp.int32)
+    src, dst, w, cnt = parse_blocks(bufs, os_, oe, weighted=weighted,
+                                    base=base, edge_cap=edge_cap,
+                                    max_digits=max_digits)
+    return src, dst, w, cnt

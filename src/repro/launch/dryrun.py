@@ -1,0 +1,266 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax-importing module: jax locks
+# the device count at first backend initialization.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. constructs abstract params/state/caches and their NamedShardings,
+  3. jit-lowers the real step (train_step with optimizer / prefill_step /
+     decode_step) against ShapeDtypeStruct inputs,
+  4. .compile()s it — proving the distribution config is coherent,
+  5. records memory_analysis, cost_analysis, and per-collective operand
+     bytes parsed from the compiled HLO into a JSON artifact that the
+     roofline harness (benchmarks/roofline.py) consumes.
+
+Usage:
+  python -m repro.launch.dryrun --arch nemotron-4-15b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out artifacts/
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of collective ops in a (per-device) HLO."""
+    sizes = {"f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "s8": 1,
+             "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
+             "u16": 2}
+    out = {}
+    pat = re.compile(
+        r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+        r"[^\w]")
+    shape_pat = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    for m in pat.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2)
+        nbytes = 0
+        for sm in shape_pat.finditer(shapes):
+            dt, dims = sm.group(1), sm.group(2)
+            if dt not in sizes:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * sizes[dt]
+        out[op] = out.get(op, 0) + nbytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def build_cell(cfg, shape: str, mesh, *, remat_policy="full",
+               accum: int | None = None, fsdp: bool | None = None,
+               step_mode: str = "gspmd"):
+    """Returns (fn, args, in_shardings) ready to lower."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..configs import BF16_STATE_ARCHS, FSDP_ARCHS
+    from ..distributed import sharding as shd
+    from ..models import transformer as tfm
+    from ..serve.step import make_decode_step, make_prefill_step
+    from ..train.optimizer import OptimizerConfig
+    from ..train.state import abstract_state
+    from ..train.step import make_train_step
+    from .shapes import SHAPES, default_accum, input_specs
+
+    sc = SHAPES[shape]
+    tp = mesh.shape["model"]
+    if fsdp is None:
+        fsdp = cfg.name in FSDP_ARCHS
+    aparams = tfm.abstract_params(cfg, tp)
+    if cfg.name in BF16_STATE_ARCHS:
+        aparams = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16), aparams)
+    pshard = shd.param_shardings(aparams, cfg, mesh, fsdp=fsdp)
+    batch = input_specs(cfg, shape)
+    bshard = shd.batch_shardings(mesh, batch)
+    rep = NamedSharding(mesh, P())
+
+    if sc.kind == "train":
+        if accum is None:
+            accum = default_accum(cfg, shape, mesh)
+        astate = abstract_state(aparams)
+        mshard = shd.moment_shardings(aparams, pshard, mesh)
+        sshard = type(astate)(rep, pshard, mshard, mshard, None)
+        if step_mode in ("local_accum", "local_accum_int8", "local_zero1"):
+            from ..train.step import (abstract_zero1_local_state,
+                                      make_local_accum_train_step)
+            zero1 = step_mode == "local_zero1"
+            step = make_local_accum_train_step(
+                cfg, OptimizerConfig(), mesh, tp=tp,
+                remat_policy=remat_policy, accum_steps=accum,
+                int8_allreduce=step_mode.endswith("int8"),
+                zero1=zero1,
+                batch_axes=("data",) if zero1 else shd.dp_axes(mesh))
+            if zero1:
+                astate = abstract_zero1_local_state(aparams, mesh.shape["data"],
+                                                    tp)
+                mz = jax.tree.map(
+                    lambda _: NamedSharding(mesh, P("data", "model")),
+                    astate.mu)
+                sshard = type(astate)(rep, pshard, mz, mz, None)
+            else:
+                # moments follow param TP sharding (no ZeRO) in plain mode
+                sshard = type(astate)(rep, pshard, pshard, pshard, None)
+        else:
+            step = make_train_step(cfg, OptimizerConfig(), tp=tp,
+                                   remat_policy=remat_policy,
+                                   accum_steps=accum)
+        fn = jax.jit(step, in_shardings=(sshard, bshard),
+                     donate_argnums=(0,))
+        return fn, (astate, batch), {"accum": accum, "fsdp": fsdp,
+                                     "step_mode": step_mode}
+
+    if sc.kind == "prefill":
+        step = make_prefill_step(cfg, sc.seq, tp=tp)
+        fn = jax.jit(step, in_shardings=(pshard, bshard))
+        return fn, (aparams, batch), {"fsdp": fsdp}
+
+    # decode
+    acaches = tfm.abstract_caches(cfg, sc.global_batch, sc.seq, tp)
+    cshard = shd.cache_shardings(acaches, cfg, mesh)
+    step = make_decode_step(cfg, sc.seq, tp=tp)
+    fn = jax.jit(step, in_shardings=(pshard, cshard, bshard),
+                 donate_argnums=(1,))
+    return fn, (aparams, acaches, batch), {"fsdp": fsdp}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, *, remat_policy="full",
+             accum=None, fsdp=None, step_mode="gspmd", verbose=True,
+             moe_overrides=None):
+    import jax
+
+    from ..configs import get_config
+    from .mesh import make_production_mesh
+    from .shapes import SHAPES, cell_enabled
+
+    cfg = get_config(arch)
+    if moe_overrides and cfg.moe is not None:
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, **moe_overrides))
+    if not cell_enabled(cfg, shape):
+        return {"arch": arch, "shape": shape,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped",
+                "reason": "full attention arch; long_500k documented skip"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        fn, args, meta = build_cell(cfg, shape, mesh,
+                                    remat_policy=remat_policy, accum=accum,
+                                    fsdp=fsdp, step_mode=step_mode)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    coll = collective_bytes(hlo_text)
+    from .accounting import cell_cost
+    from .hlo import collective_bytes_corrected
+    coll_corrected = collective_bytes_corrected(hlo_text)
+    sc = SHAPES[shape]
+    acct = cell_cost(cfg, mesh.shape["model"], mesh.size, seq=sc.seq,
+                     batch=sc.global_batch, kind=sc.kind,
+                     accum=meta.get("accum", 1), remat=remat_policy,
+                     fsdp=meta["fsdp"])
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": mesh.size,
+        "status": "ok",
+        "meta": meta,
+        "remat": remat_policy,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        # raw HLO numbers (NB: while bodies counted once — see accounting.py)
+        "flops_per_device": cost.get("flops", 0.0),
+        "bytes_per_device": cost.get("bytes accessed", 0.0),
+        "collective_bytes_per_device": coll,
+        # trip-corrected / analytic numbers the roofline uses
+        "collective_bytes_corrected": coll_corrected,
+        "analytic_flops_total": acct.flops_total,
+        "analytic_bytes_per_device": acct.bytes_per_device,
+        "model_flops": acct.model_flops,
+        "memory": {
+            "argument_gb": mem.argument_size_in_bytes / 1e9,
+            "output_gb": mem.output_size_in_bytes / 1e9,
+            "temp_gb": mem.temp_size_in_bytes / 1e9,
+            "alias_gb": mem.alias_size_in_bytes / 1e9,
+        },
+        "tokens": sc.seq * sc.global_batch if sc.kind != "decode"
+        else sc.global_batch,
+        "kind": sc.kind,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+    if verbose:
+        print(f"[{rec['mesh']}] {arch} x {shape}: compile ok "
+              f"({rec['compile_s']}s)  flops/dev={rec['flops_per_device']:.3e} "
+              f"temp={rec['memory']['temp_gb']:.2f}GB "
+              f"coll={coll['total']/1e9:.3f}GB/dev")
+    return rec
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--mesh", choices=["single", "multi", "both"],
+                   default="both")
+    p.add_argument("--remat", default="full")
+    p.add_argument("--accum", type=int, default=None)
+    p.add_argument("--fsdp", type=int, default=None)
+    p.add_argument("--out", default="artifacts")
+    args = p.parse_args(argv)
+
+    from ..configs import ARCHS
+    from .shapes import SHAPES
+
+    archs = list(ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    results, failures = [], 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                try:
+                    rec = run_cell(arch, shape, mp, remat_policy=args.remat,
+                                   accum=args.accum,
+                                   fsdp=None if args.fsdp is None
+                                   else bool(args.fsdp))
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "failed", "error": repr(e)}
+                    failures += 1
+                results.append(rec)
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    ok = sum(1 for r in results if r["status"] == "ok")
+    sk = sum(1 for r in results if r["status"] == "skipped")
+    print(f"\ndry-run: {ok} ok, {sk} skipped, {failures} failed "
+          f"/ {len(results)} cells")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

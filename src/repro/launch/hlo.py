@@ -1,0 +1,160 @@
+"""HLO-text analysis: collective bytes with while-loop trip correction.
+
+XLA reports each computation once, but scanned programs execute while
+bodies `trip` times.  jax lowers scans to whiles whose induction bound is
+a constant — either compared directly in the condition computation or
+threaded through the init tuple.  We recover it from both places, build
+the computation call graph (ENTRY -> while bodies / called computations),
+multiply each computation's collective bytes by the product of enclosing
+trip counts, and sum.  This makes the collective roofline term reflect
+actual execution counts for the schedules we emit (layer scans,
+accumulation scans, chunked attention/ssm scans).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CONSTDEF = re.compile(r"%([\w\.\-]+)\s*=\s*s32\[\]\s*constant\((\d+)\)")
+_ANYCONST = re.compile(r"constant\((\d+)\)")
+_OPREF = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def split_computations(hlo: str) -> Tuple[Dict[str, List[str]], str]:
+    """-> ({name: lines}, entry_name)."""
+    comps: Dict[str, List[str]] = {}
+    entry = ""
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if cur is None:
+            if s.endswith("{") and "->" in s and (
+                    s.startswith("%") or s.startswith("ENTRY")):
+                name = s.split("(", 1)[0].replace("ENTRY", "").strip()
+                name = name.lstrip("%").strip()
+                comps[name] = []
+                cur = name
+                if s.startswith("ENTRY"):
+                    entry = name
+            continue
+        if s == "}":
+            cur = None
+        else:
+            comps[cur].append(s)
+    return comps, entry
+
+
+def _trip_for_while(line: str, caller_lines: List[str],
+                    comps: Dict[str, List[str]]) -> Tuple[int, str]:
+    """(trip count, body computation name) for one while instruction."""
+    cond = re.search(r"condition=%?([\w\.\-]+)", line)
+    body = re.search(r"body=%?([\w\.\-]+)", line)
+    body_name = body.group(1) if body else ""
+    candidates = []
+    # (1) constant directly in the condition computation
+    if cond and cond.group(1) in comps:
+        for ln in comps[cond.group(1)]:
+            candidates += [int(m.group(1)) for m in _ANYCONST.finditer(ln)]
+    # (2) constants threaded through the init tuple
+    m = re.search(r"while\(%?([\w\.\-]+)\)", line)
+    if m:
+        init = m.group(1)
+        consts = dict()
+        for ln in caller_lines:
+            cm = _CONSTDEF.search(ln)
+            if cm:
+                consts[cm.group(1)] = int(cm.group(2))
+        for ln in caller_lines:
+            if ln.split("=", 1)[0].strip().lstrip("%").split(" ")[0] == init:
+                for om in _OPREF.finditer(ln.split("tuple(", 1)[-1]):
+                    if om.group(1) in consts:
+                        candidates.append(consts[om.group(1)])
+                break
+    return (max(candidates) if candidates else 1), body_name
+
+
+def collective_bytes_corrected(hlo: str) -> Dict[str, float]:
+    comps, entry = split_computations(hlo)
+    if not entry:
+        return {"total": 0.0}
+
+    raw: Dict[str, Dict[str, int]] = {}
+    for cname, lines in comps.items():
+        per: Dict[str, int] = {}
+        for ln in lines:
+            for op in COLLECTIVES:
+                if f" {op}(" in ln or f" {op}-start(" in ln:
+                    # result shape(s) sit between '=' and the op mnemonic
+                    rhs = ln.split("=", 1)[1] if "=" in ln else ln
+                    per[op] = per.get(op, 0) + _shape_bytes(
+                        rhs[:rhs.find(op)])
+                    break
+        raw[cname] = per
+
+    mult: Dict[str, float] = {entry: 1.0}
+    stack = [entry]
+    visited = set()
+    while stack:
+        cname = stack.pop()
+        if cname in visited or cname not in comps:
+            continue
+        visited.add(cname)
+        m = mult.get(cname, 1.0)
+        for ln in comps[cname]:
+            if " while(" in ln or ln.startswith("while("):
+                trips, body = _trip_for_while(ln, comps[cname], comps)
+                if body in comps:
+                    nm = m * trips
+                    if nm > mult.get(body, 0.0):
+                        mult[body] = nm
+                        visited.discard(body)
+                    stack.append(body)
+                cond = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if cond and cond.group(1) in comps:
+                    mult.setdefault(cond.group(1), m)
+                continue
+            for cm in re.finditer(r"(?:calls=|to_apply=|condition=|body=)"
+                                  r"%?([\w\.\-]+)", ln):
+                key = cm.group(1)
+                if key in comps and key not in visited:
+                    if m > mult.get(key, 0.0):
+                        mult[key] = m
+                    stack.append(key)
+            bm = re.search(r"branch_computations=\{([^}]*)\}", ln)
+            if bm:
+                for b in bm.group(1).split(","):
+                    key = b.strip().lstrip("%")
+                    if key in comps:
+                        if m > mult.get(key, 0.0):
+                            mult[key] = m
+                        stack.append(key)
+
+    out: Dict[str, float] = {}
+    for cname, per in raw.items():
+        m = mult.get(cname, 1.0 if any(per.values()) else 0.0)
+        for op, b in per.items():
+            out[op] = out.get(op, 0.0) + b * m
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out

@@ -1,0 +1,83 @@
+"""Assigned input shapes and abstract input specs per (arch x shape).
+
+  train_4k      seq 4096,    global_batch 256   -> train_step
+  prefill_32k   seq 32768,   global_batch 32    -> prefill_step
+  decode_32k    seq 32768,   global_batch 128   -> decode_step
+  long_500k     seq 524288,  global_batch 1     -> decode_step
+                (sub-quadratic archs only; full-attention archs skip)
+
+All specs are ShapeDtypeStructs — weak-type-correct, shardable, zero
+device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCase] = {
+    "train_4k": ShapeCase("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_enabled(cfg, shape: str) -> bool:
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False           # pure full attention: documented skip
+    return True
+
+
+def input_specs(cfg, shape: str):
+    """Abstract batch for the given shape (token/frame/image stand-ins)."""
+    sc = SHAPES[shape]
+    b, s = sc.global_batch, sc.seq
+    sd = jax.ShapeDtypeStruct
+    if sc.kind in ("train", "prefill"):
+        batch = {}
+        if cfg.embed_stub:
+            batch["frames"] = sd((b, s, cfg.d_model), F32)
+        else:
+            batch["tokens"] = sd((b, s), I32)
+        if sc.kind == "train":
+            batch["labels"] = sd((b, s), I32)
+        if cfg.num_image_tokens:
+            batch["image_embeds"] = sd((b, cfg.num_image_tokens, cfg.d_model), F32)
+        return batch
+    return {"token": sd((b,), I32), "pos": sd((b,), I32)}
+
+
+def default_accum(cfg, shape: str, mesh) -> int:
+    """Gradient-accumulation heuristic: keep the per-device microbatch's
+    layer-boundary residuals under ~2 GB (hillclimbs tune this knob)."""
+    sc = SHAPES[shape]
+    if sc.kind != "train":
+        return 1
+    from ..distributed.sharding import _axsize, batch_axes
+    ba = batch_axes(mesh, sc.global_batch)
+    b_local = sc.global_batch // _axsize(mesh, ba)
+    bytes_per_layer = sc.seq * cfg.d_model * 2
+    budget = 2 << 30
+    live = b_local * bytes_per_layer * max(cfg.num_layers, 1)
+    accum = 1
+    while live // accum > budget and accum < b_local:
+        accum *= 2
+    while sc.global_batch % accum or (sc.global_batch // accum) % max(
+            _axsize(mesh, ba), 1):
+        accum //= 2
+    return max(accum, 1)

@@ -1,0 +1,11 @@
+"""Model zoo: the 10 assigned architectures as one composable stack."""
+from .config import ModelConfig, MoEConfig, SSMConfig
+from .transformer import (abstract_caches, abstract_params, forward_decode,
+                          forward_prefill, forward_train, init_caches,
+                          init_params, loss_fn)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig",
+    "init_params", "abstract_params", "forward_train", "loss_fn",
+    "init_caches", "abstract_caches", "forward_prefill", "forward_decode",
+]

@@ -1,0 +1,180 @@
+"""GQA attention: full / chunked / sliding-window / cross, with KV caches.
+
+Design notes for the mesh:
+  * Q heads are padded to a multiple of TP and sharded over "model";
+    KV heads are sharded only when divisible, otherwise replicated
+    (their projections are tiny) while the KV *cache* is sharded over
+    the batch/data axis.
+  * Long sequences use a q-chunked attention loop (lax.scan) so live
+    memory is O(chunk * S) instead of O(S^2); sliding-window archs keep
+    only `window` KV entries in the decode cache (a ring buffer), which
+    is what makes long_500k decode O(1) per token.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import BF16, F32, apply_rope, causal_mask
+
+NEG_INF = -1e9
+
+
+def init_attn_params(key, cfg, tp: int, *, cross: bool = False):
+    d, hd, k_h = cfg.d_model, cfg.head_dim, cfg.num_kv_heads
+    h = cfg.padded_heads(tp)
+    ks = jax.random.split(key, 4)
+    scale_q = 1.0 / jnp.sqrt(d)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h, hd), F32) * scale_q,
+        "wk": jax.random.normal(ks[1], (d, k_h, hd), F32) * scale_q,
+        "wv": jax.random.normal(ks[2], (d, k_h, hd), F32) * scale_q,
+        "wo": jax.random.normal(ks[3], (h, hd, d), F32) / jnp.sqrt(h * hd),
+    }
+    # zero the padded q heads so they are inert (and stay so under decay)
+    if h != cfg.num_heads:
+        mask = (jnp.arange(h) < cfg.num_heads).astype(F32)[None, :, None]
+        p["wq"] = p["wq"] * mask
+        p["wo"] = p["wo"] * mask[0][:, :, None]
+    return p
+
+
+def _qkv(p, x, positions, cfg, *, rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(BF16))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(BF16))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(BF16))
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,H,hd), k: (B,Sk,K,hd) -> (B, K, G, Sq, Sk)."""
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, hd)
+    return jnp.einsum("bqkgh,bskh->bkgqs", qg, k) / jnp.sqrt(hd).astype(BF16)
+
+
+def _gqa_out(scores, v, h):
+    b, kh, g, sq, sk = scores.shape
+    out = jnp.einsum("bkgqs,bskh->bqkgh", scores, v)
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+def full_attention(q, k, v, *, q_offset=0, window=None, causal=True):
+    """Reference attention; used when S is small enough to materialize."""
+    scores = _gqa_scores(q, k).astype(F32)
+    if causal:
+        m = causal_mask(q.shape[1], k.shape[1], q_offset, window)
+        scores = scores + m[None, None, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(BF16)
+    return _gqa_out(probs, v, q.shape[2])
+
+
+def chunked_attention(q, k, v, *, chunk: int = 512, window=None):
+    """Causal attention scanned over q chunks: live memory O(chunk*S).
+
+    Numerically identical to full softmax (each chunk sees its full
+    key prefix).  Used for prefill/train when S*S would not fit.
+    """
+    b, s, h, hd = q.shape
+    nq = s // chunk
+
+    def body(_, qc_i):
+        qc, i = qc_i
+        off = i * chunk
+        scores = _gqa_scores(qc, k).astype(F32)
+        m = causal_mask(chunk, k.shape[1], off, window)
+        probs = jax.nn.softmax(scores + m[None, None, None], axis=-1).astype(BF16)
+        return None, _gqa_out(probs, v, h)
+
+    qs = q.reshape(b, nq, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    _, outs = jax.lax.scan(body, None,
+                           (qs, jnp.arange(nq, dtype=jnp.int32)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+def attention_train(p, x, positions, cfg, tp: int, *, chunk: int = 1024,
+                    rope: bool = True):
+    q, k, v = _qkv(p, x, positions, cfg, rope=rope)
+    s = x.shape[1]
+    if s <= 2048:
+        out = full_attention(q, k, v, window=cfg.window)
+    else:
+        out = chunked_attention(q, k, v, chunk=chunk, window=cfg.window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(BF16))
+
+
+# ---- KV cache (decode) ------------------------------------------------------
+
+@dataclasses.dataclass
+class CacheSpec:
+    length: int          # cache capacity: min(window, max_seq)
+    ring: bool           # True for sliding-window ring buffers
+
+
+def cache_spec(cfg, max_seq: int) -> CacheSpec:
+    if cfg.window is not None and cfg.window < max_seq:
+        return CacheSpec(cfg.window, True)
+    return CacheSpec(max_seq, False)
+
+
+def init_cache(cfg, spec: CacheSpec, batch: int):
+    kh, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (batch, spec.length, kh, hd)
+    return {"k": jnp.zeros(shape, BF16), "v": jnp.zeros(shape, BF16)}
+
+
+def attention_decode(p, x, pos, cache, spec: CacheSpec, cfg, tp: int,
+                     *, rope: bool = True):
+    """One-token decode step.  pos: (B,) absolute positions.
+
+    Ring caches write at pos % window; position-aware masking keeps
+    softmax correct for both layouts.
+    """
+    b = x.shape[0]
+    positions = pos[:, None]
+    q, k_new, v_new = _qkv(p, x, positions, cfg, rope=rope)
+
+    slot = (pos % spec.length) if spec.ring else pos
+    bidx = jnp.arange(b)
+    k = cache["k"].at[bidx, slot].set(k_new[:, 0])
+    v = cache["v"].at[bidx, slot].set(v_new[:, 0])
+
+    # key absolute positions for masking
+    lane = jnp.arange(spec.length)[None, :]
+    if spec.ring:
+        # entry at slot s holds the latest position p with p % L == s, p <= pos
+        cur = pos[:, None]
+        kpos = cur - ((cur - lane) % spec.length)
+    else:
+        kpos = jnp.broadcast_to(lane, (b, spec.length))
+    valid = (kpos <= pos[:, None]) & (kpos > pos[:, None] - (cfg.window or 10**9))
+
+    scores = _gqa_scores(q, k).astype(F32)              # (B,K,G,1,L)
+    mask = jnp.where(valid, 0.0, NEG_INF)[:, None, None, None, :]
+    probs = jax.nn.softmax(scores + mask, axis=-1).astype(BF16)
+    out = _gqa_out(probs, v, q.shape[2])
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(BF16))
+    return y, {"k": k, "v": v}
+
+
+# ---- cross attention (VLM) ---------------------------------------------------
+
+def init_xattn_params(key, cfg, tp: int):
+    return init_attn_params(key, cfg, tp)
+
+
+def cross_attention(p, x, kv_embeds, cfg, tp: int):
+    """x: (B,S,D) queries; kv_embeds: (B,N,D) image tokens (no mask)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(BF16))
+    k = jnp.einsum("bnd,dhk->bnhk", kv_embeds, p["wk"].astype(BF16))
+    v = jnp.einsum("bnd,dhk->bnhk", kv_embeds, p["wv"].astype(BF16))
+    out = full_attention(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(BF16))

@@ -1,0 +1,206 @@
+"""Per-layer assembly and the three execution modes (train/prefill/decode).
+
+A *segment* is a repeated pattern of layer kinds — ("attn",) for
+homogeneous stacks, ("rglru","rglru","attn") for RecurrentGemma,
+("attn",)*4+("xattn",) for the vision model — scanned with stacked
+params so the HLO stays one-block-sized regardless of depth.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mamba as mb
+from . import mlp as mlpm
+from . import moe as moem
+from . import rglru as rg
+from .layers import BF16, F32, rms_norm
+
+
+def plan_segments(cfg) -> list[Tuple[Tuple[str, ...], int]]:
+    p = cfg.layer_pattern
+    n_full = cfg.num_layers // len(p)
+    segs = [(p, n_full)]
+    rem = cfg.num_layers - n_full * len(p)
+    if rem:
+        segs.append((p[:rem], 1))
+    return segs
+
+
+# ---- init --------------------------------------------------------------------
+
+def init_layer(key, kind: str, cfg, tp: int) -> Dict[str, Any]:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": jnp.zeros((d,), F32)}
+    if kind == "attn":
+        p["attn"] = attn.init_attn_params(ks[0], cfg, tp)
+        p["norm2"] = jnp.zeros((d,), F32)
+        if cfg.moe is not None:
+            p["moe"] = moem.init_moe_params(ks[1], cfg)
+        else:
+            p["mlp"] = mlpm.init_mlp_params(ks[1], d, cfg.d_ff, cfg.mlp)
+    elif kind == "xattn":
+        p["xattn"] = attn.init_xattn_params(ks[0], cfg, tp)
+        p["norm2"] = jnp.zeros((d,), F32)
+        p["mlp"] = mlpm.init_mlp_params(ks[1], d, cfg.d_ff, cfg.mlp)
+    elif kind == "mamba":
+        p["mamba"] = mb.init_mamba_params(ks[0], cfg)
+    elif kind == "rglru":
+        p["rglru"] = rg.init_rglru_params(ks[0], cfg)
+        p["norm2"] = jnp.zeros((d,), F32)
+        p["mlp"] = mlpm.init_mlp_params(ks[1], d, cfg.d_ff,
+                                        "geglu" if cfg.mlp == "geglu" else cfg.mlp)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_segment(key, pattern, n: int, cfg, tp: int):
+    def one(k):
+        kk = jax.random.split(k, len(pattern))
+        return {f"sub{i}": init_layer(kk[i], kind, cfg, tp)
+                for i, kind in enumerate(pattern)}
+    return jax.vmap(one)(jax.random.split(key, n))
+
+
+# ---- train forward -----------------------------------------------------------
+
+def apply_layer_train(kind: str, p, x, positions, cfg, tp, image_embeds=None):
+    aux = jnp.zeros((), F32)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        x = x + attn.attention_train(p["attn"], h, positions, cfg, tp)
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y, aux = moem.moe_apply(p["moe"], h2, cfg)
+        else:
+            y = mlpm.mlp_apply(p["mlp"], h2, cfg.mlp)
+        x = x + y
+    elif kind == "xattn":
+        x = x + attn.cross_attention(p["xattn"], h, image_embeds, cfg, tp)
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + mlpm.mlp_apply(p["mlp"], h2, cfg.mlp)
+    elif kind == "mamba":
+        x = x + mb.mamba_apply(p["mamba"], h, cfg)
+    elif kind == "rglru":
+        x = x + rg.rglru_apply(p["rglru"], h, cfg)
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + mlpm.mlp_apply(p["mlp"], h2,
+                               "geglu" if cfg.mlp == "geglu" else cfg.mlp)
+    return x, aux
+
+
+# ---- prefill (returns caches) -------------------------------------------------
+
+def apply_layer_prefill(kind: str, p, x, positions, cfg, tp, spec,
+                        image_embeds=None):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        q, k, v = attn._qkv(p["attn"], h, positions, cfg)
+        s = x.shape[1]
+        if s <= 2048:
+            out = attn.full_attention(q, k, v, window=cfg.window)
+        else:
+            out = attn.chunked_attention(q, k, v, window=cfg.window)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"].astype(BF16))
+        cache = _fill_cache(k, v, positions, spec)
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y, _ = moem.moe_apply(p["moe"], h2, cfg)
+        else:
+            y = mlpm.mlp_apply(p["mlp"], h2, cfg.mlp)
+        x = x + y
+    elif kind == "xattn":
+        kk = jnp.einsum("bnd,dhk->bnhk", image_embeds,
+                        p["xattn"]["wk"].astype(BF16))
+        vv = jnp.einsum("bnd,dhk->bnhk", image_embeds,
+                        p["xattn"]["wv"].astype(BF16))
+        x = x + attn.cross_attention(p["xattn"], h, image_embeds, cfg, tp)
+        cache = {"k": kk, "v": vv}
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + mlpm.mlp_apply(p["mlp"], h2, cfg.mlp)
+    elif kind == "mamba":
+        dc = cfg.ssm.d_conv
+        xz = jnp.einsum("bsd,de->bse", h, p["mamba"]["in_proj"].astype(BF16))
+        u_raw, _ = jnp.split(xz, 2, axis=-1)
+        y, state = mb.mamba_apply(p["mamba"], h, cfg, return_state=True)
+        x = x + y
+        cache = {"conv": u_raw[:, -(dc - 1):].astype(BF16), "ssm": state}
+    elif kind == "rglru":
+        xg = jnp.einsum("bsd,de->bse", h, p["rglru"]["in_proj"].astype(BF16))
+        u_raw, _ = jnp.split(xg, 2, axis=-1)
+        y, state = rg.rglru_apply(p["rglru"], h, cfg, return_state=True)
+        x = x + y
+        cache = {"conv": u_raw[:, -3:].astype(BF16), "h": state}
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + mlpm.mlp_apply(p["mlp"], h2,
+                               "geglu" if cfg.mlp == "geglu" else cfg.mlp)
+    return x, cache
+
+
+def _fill_cache(k, v, positions, spec: attn.CacheSpec):
+    b, s = k.shape[0], k.shape[1]
+    keep = min(s, spec.length)
+    ck = jnp.zeros((b, spec.length) + k.shape[2:], BF16)
+    cv = jnp.zeros_like(ck)
+    if spec.ring:
+        slots = positions[:, -keep:] % spec.length
+        bi = jnp.arange(b)[:, None]
+        ck = ck.at[bi, slots].set(k[:, -keep:])
+        cv = cv.at[bi, slots].set(v[:, -keep:])
+    else:
+        ck = jax.lax.dynamic_update_slice(ck, k[:, :keep], (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v[:, :keep], (0, 0, 0, 0))
+    return {"k": ck, "v": cv}
+
+
+def init_layer_cache(kind: str, cfg, spec, batch: int, tp: int):
+    if kind == "attn":
+        return attn.init_cache(cfg, spec, batch)
+    if kind == "xattn":
+        kh, hd = cfg.num_kv_heads, cfg.head_dim
+        n = cfg.num_image_tokens
+        return {"k": jnp.zeros((batch, n, kh, hd), BF16),
+                "v": jnp.zeros((batch, n, kh, hd), BF16)}
+    if kind == "mamba":
+        return mb.init_mamba_cache(cfg, batch)
+    if kind == "rglru":
+        return rg.init_rglru_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+# ---- decode -------------------------------------------------------------------
+
+def apply_layer_decode(kind: str, p, x, pos, cache, spec, cfg, tp):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        y, cache = attn.attention_decode(p["attn"], h, pos, cache, spec, cfg, tp)
+        x = x + y
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y2, _ = moem.moe_apply(p["moe"], h2, cfg)
+        else:
+            y2 = mlpm.mlp_apply(p["mlp"], h2, cfg.mlp)
+        x = x + y2
+    elif kind == "xattn":
+        # static image kv from cache
+        q = jnp.einsum("bsd,dhk->bshk", h, p["xattn"]["wq"].astype(BF16))
+        out = attn.full_attention(q, cache["k"], cache["v"], causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, p["xattn"]["wo"].astype(BF16))
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + mlpm.mlp_apply(p["mlp"], h2, cfg.mlp)
+    elif kind == "mamba":
+        y, cache = mb.mamba_decode(p["mamba"], h, cache, cfg)
+        x = x + y
+    elif kind == "rglru":
+        y, cache = rg.rglru_decode(p["rglru"], h, cache, cfg)
+        x = x + y
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + mlpm.mlp_apply(p["mlp"], h2,
+                               "geglu" if cfg.mlp == "geglu" else cfg.mlp)
+    return x, cache

@@ -1,0 +1,55 @@
+"""Shared neural building blocks: norms, RoPE, embeddings, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with f32 accumulation, cast back to input dtype."""
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(F32))).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(F32) * freqs   # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed_lookup(embedding: jax.Array, tokens: jax.Array) -> jax.Array:
+    """(V, D) f32 table -> (B, S, D) bf16 activations."""
+    return embedding[tokens].astype(BF16)
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=F32) -> jax.Array:
+    fan_in = np.prod([shape[i] for i in (in_axis,) if True]) if isinstance(in_axis, int) else 1
+    fan_in = shape[in_axis]
+    scale = 1.0 / np.sqrt(fan_in)
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def causal_mask(sq: int, sk: int, q_offset, window=None) -> jax.Array:
+    """(sq, sk) additive mask; q_offset = absolute position of q[0]."""
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    ok = kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, -1e9).astype(F32)

@@ -1,0 +1,127 @@
+"""Mamba-1 (S6) selective-state-space layer.
+
+Training/prefill runs the recurrence as a *chunked* associative scan:
+an outer lax.scan over sequence chunks carries the (B, d_inner, d_state)
+state while an inner associative_scan parallelizes within the chunk —
+live memory is O(chunk * d_inner * d_state) instead of O(S * ...), which
+is what lets the 500k-token shapes compile.  Decode is the O(1) single
+step.  d_inner is sharded over "model" (all state tensors inherit it).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import BF16, F32
+
+
+def init_mamba_params(key, cfg):
+    d = cfg.d_model
+    s = cfg.ssm
+    di = cfg.d_inner
+    ks = jax.random.split(key, 7)
+    si = 1.0 / jnp.sqrt(d)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), F32) * si,
+        "conv_w": jax.random.normal(ks[1], (s.d_conv, di), F32) * 0.1,
+        "conv_b": jnp.zeros((di,), F32),
+        "x_proj": jax.random.normal(ks[2], (di, s.dt_rank + 2 * s.d_state), F32)
+        / jnp.sqrt(di),
+        "dt_proj": jax.random.normal(ks[3], (s.dt_rank, di), F32)
+        / jnp.sqrt(s.dt_rank),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01, F32))),  # softplus^-1
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, s.d_state + 1, dtype=F32), (di, s.d_state)) + 0.0),
+        "D": jnp.ones((di,), F32),
+        "out_proj": jax.random.normal(ks[4], (di, d), F32) / jnp.sqrt(di),
+    }
+
+
+def _ssm_inputs(p, u, cfg):
+    """u: (B, L, di) post-conv activations -> (dA, dBu, C) chunk tensors."""
+    s = cfg.ssm
+    bc = jnp.einsum("bld,dk->blk", u, p["x_proj"].astype(BF16)).astype(F32)
+    dt, Bm, Cm = jnp.split(bc, [s.dt_rank, s.dt_rank + s.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("blr,rd->bld", dt.astype(BF16), p["dt_proj"].astype(BF16))
+        .astype(F32) + p["dt_bias"])                       # (B,L,di)
+    A = -jnp.exp(p["A_log"])                               # (di, N)
+    dA = jnp.exp(dt[..., None] * A)                        # (B,L,di,N)
+    dBu = dt[..., None] * Bm[:, :, None, :] * u.astype(F32)[..., None]
+    return dA, dBu, Cm
+
+
+def _scan_chunk(state, dA, dBu, Cm):
+    """state: (B,di,N).  Returns (new_state, y (B,L,di))."""
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, b1 * a2 + b2
+
+    cA, cB = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+    h = cA * state[:, None] + cB                           # (B,L,di,N)
+    y = jnp.einsum("bldn,bln->bld", h, Cm)
+    return h[:, -1], y
+
+
+def mamba_apply(p, x, cfg, *, chunk: int = 256, state=None, return_state=False):
+    """x: (B,S,D).  Full-sequence form (training / prefill)."""
+    b, s_len, d = x.shape
+    di = cfg.d_inner
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(BF16))
+    u, z = jnp.split(xz, 2, axis=-1)
+
+    # depthwise causal conv, width d_conv
+    dc = cfg.ssm.d_conv
+    upad = jnp.pad(u, ((0, 0), (dc - 1, 0), (0, 0)))
+    conv = sum(upad[:, i:i + s_len] * p["conv_w"][i].astype(BF16)
+               for i in range(dc)) + p["conv_b"].astype(BF16)
+    u = jax.nn.silu(conv.astype(F32)).astype(BF16)
+
+    if state is None:
+        state = jnp.zeros((b, di, cfg.ssm.d_state), F32)
+
+    nch = max(1, s_len // chunk)
+    ch = s_len // nch
+    uc = u.reshape(b, nch, ch, di).transpose(1, 0, 2, 3)
+
+    def outer(st, uc_t):
+        dA, dBu, Cm = _ssm_inputs(p, uc_t, cfg)
+        st2, y = _scan_chunk(st, dA, dBu, Cm)
+        return st2, y
+
+    state, ys = jax.lax.scan(outer, state, uc)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s_len, di)
+    y = y + u.astype(F32) * p["D"]
+    y = y.astype(BF16) * jax.nn.silu(z.astype(F32)).astype(BF16)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(BF16))
+    if return_state:
+        return out, state
+    return out
+
+
+def init_mamba_cache(cfg, batch: int):
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, cfg.d_inner), BF16),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm.d_state), F32),
+    }
+
+
+def mamba_decode(p, x, cache, cfg):
+    """x: (B,1,D) one token; O(1) state update."""
+    b = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(BF16))
+    u, z = jnp.split(xz, 2, axis=-1)                       # (B,1,di)
+    dc = cfg.ssm.d_conv
+    win = jnp.concatenate([cache["conv"], u], axis=1)      # (B,dc,di)
+    conv = sum(win[:, i] * p["conv_w"][i].astype(BF16)
+               for i in range(dc)) + p["conv_b"].astype(BF16)
+    u1 = jax.nn.silu(conv.astype(F32)).astype(BF16)[:, None]  # (B,1,di)
+
+    dA, dBu, Cm = _ssm_inputs(p, u1, cfg)
+    h = dA[:, 0] * cache["ssm"] + dBu[:, 0]                # (B,di,N)
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None]     # (B,1,di)
+    y = y + u1.astype(F32) * p["D"]
+    y = y.astype(BF16) * jax.nn.silu(z.astype(F32)).astype(BF16)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(BF16))
+    return out, {"conv": win[:, 1:], "ssm": h}

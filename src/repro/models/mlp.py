@@ -1,0 +1,35 @@
+"""Feed-forward variants: SwiGLU / GeGLU / squared-ReLU / GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import BF16, F32
+
+
+def init_mlp_params(key, d_model: int, d_ff: int, kind: str):
+    ks = jax.random.split(key, 3)
+    si = 1.0 / jnp.sqrt(d_model)
+    so = 1.0 / jnp.sqrt(d_ff)
+    p = {"w_in": jax.random.normal(ks[0], (d_model, d_ff), F32) * si,
+         "w_out": jax.random.normal(ks[1], (d_ff, d_model), F32) * so}
+    if kind in ("swiglu", "geglu"):
+        p["w_gate"] = jax.random.normal(ks[2], (d_model, d_ff), F32) * si
+    return p
+
+
+def mlp_apply(p, x, kind: str):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(BF16))
+    if kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(BF16))
+        h = jax.nn.silu(g.astype(F32)).astype(BF16) * h
+    elif kind == "geglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(BF16))
+        h = jax.nn.gelu(g.astype(F32)).astype(BF16) * h
+    elif kind == "relu2":       # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(h.astype(F32))).astype(BF16)
+    elif kind == "gelu":
+        h = jax.nn.gelu(h.astype(F32)).astype(BF16)
+    else:
+        raise ValueError(kind)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(BF16))

@@ -1,0 +1,90 @@
+"""Mixture-of-Experts layer (GSPMD group-wise dispatch, Switch/GLaM style).
+
+Tokens are reshaped into groups of `group_size`; within each group the
+router's top-k choices are turned into capacity-bounded positions via a
+cumulative-sum (the same "claim a slot by prefix rank" trick the GVEL CSR
+builder uses — position-in-expert replaces an atomic fetch-add).  The
+dispatch/combine tensors are (G, S_g, E, C) einsums, which GSPMD shards
+cleanly: groups over the batch/data axes, experts over "model" when
+E % TP == 0 (true expert parallelism — llama4's 128 experts), otherwise
+the expert hidden dim is TP-sharded (mixtral's 8 experts on a 16-way
+axis become tensor-parallel experts).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import BF16, F32
+
+
+def init_moe_params(key, cfg):
+    d, m = cfg.d_model, cfg.moe
+    ks = jax.random.split(key, 4)
+    si = 1.0 / jnp.sqrt(d)
+    so = 1.0 / jnp.sqrt(m.d_ff)
+    return {
+        "router": jax.random.normal(ks[0], (d, m.num_experts), F32) * si,
+        "w_in": jax.random.normal(ks[1], (m.num_experts, d, m.d_ff), F32) * si,
+        "w_gate": jax.random.normal(ks[2], (m.num_experts, d, m.d_ff), F32) * si,
+        "w_out": jax.random.normal(ks[3], (m.num_experts, m.d_ff, d), F32) * so,
+    }
+
+
+def moe_apply(p, x, cfg):
+    """x: (B, S, D) -> (B, S, D), plus load-balancing aux loss."""
+    m = cfg.moe
+    b, s, d = x.shape
+    tokens = b * s
+    gs = min(m.group_size, tokens)
+    g = -(-tokens // gs)
+    pad = g * gs - tokens
+    xf = x.reshape(tokens, d)
+    if pad:      # ragged batches (prefill/serve): pad, drop on the way out
+        xf = jnp.concatenate([xf, jnp.zeros((pad, d), x.dtype)])
+    xg = xf.reshape(g, gs, d)
+
+    logits = jnp.einsum("gsd,de->gse", xg, p["router"].astype(BF16)).astype(F32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G,S,E)
+
+    cap = int(gs * m.top_k / m.num_experts * m.capacity_factor)
+    cap = max(cap, m.top_k)
+
+    # top-k selection, one expert at a time (k is 1 or 2 here)
+    gates = []
+    masks = []
+    remaining = probs
+    for _ in range(m.top_k):
+        idx = jnp.argmax(remaining, axis=-1)                   # (G,S)
+        onehot = jax.nn.one_hot(idx, m.num_experts, dtype=F32)  # (G,S,E)
+        gates.append(jnp.sum(probs * onehot, axis=-1))         # (G,S)
+        masks.append(onehot)
+        remaining = remaining * (1.0 - onehot)
+
+    # aux load-balance loss (Switch): mean over experts of f_e * p_e * E
+    me = jnp.mean(probs, axis=1)                               # (G,E)
+    fe = jnp.mean(masks[0], axis=1)                            # (G,E)
+    aux = jnp.mean(jnp.sum(me * fe, axis=-1)) * m.num_experts
+
+    # capacity positions: prefix rank within expert across the group,
+    # k-th choices queue behind all first choices
+    combined = jnp.zeros((g, gs, m.num_experts, cap), F32)
+    prior = jnp.zeros((g, m.num_experts), F32)
+    for mask, gate in zip(masks, gates):
+        pos = jnp.cumsum(mask, axis=1) - mask + prior[:, None, :]   # (G,S,E)
+        prior = prior + jnp.sum(mask, axis=1)
+        keep = (pos < cap) * mask                              # dropped beyond C
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=F32)
+        combined = combined + gate[:, :, None, None] * keep[..., None] * pos_oh
+
+    dispatch = (combined > 0).astype(BF16)                     # (G,S,E,C)
+    xin = jnp.einsum("gsd,gsec->gecd", xg, dispatch)           # (G,E,C,D)
+    h = jnp.einsum("gecd,edf->gecf", xin, p["w_in"].astype(BF16))
+    gt = jnp.einsum("gecd,edf->gecf", xin, p["w_gate"].astype(BF16))
+    h = jax.nn.silu(gt.astype(F32)).astype(BF16) * h
+    out = jnp.einsum("gecf,efd->gecd", h, p["w_out"].astype(BF16))
+    y = jnp.einsum("gecd,gsec->gsd", out, combined.astype(BF16))
+    y = y.reshape(g * gs, d)
+    if pad:
+        y = y[:tokens]
+    return y.reshape(b, s, d), aux

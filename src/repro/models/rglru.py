@@ -1,0 +1,107 @@
+"""RG-LRU recurrent block (RecurrentGemma temporal-mixing layer).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+a_t = exp(-c * softplus(Lambda) * sigmoid(r_t))
+
+with input/recurrence gates r_t, i_t from linear maps of x.  The block is
+conv1d(4) -> RG-LRU, wrapped by linear in/out projections (the "recurrent
+block" of the paper).  Same chunked associative-scan execution as mamba:
+O(chunk) live memory, O(1) decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import BF16, F32
+
+_C = 8.0
+
+
+def init_rglru_params(key, cfg):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    si = 1.0 / jnp.sqrt(d)
+    sw = 1.0 / jnp.sqrt(w)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * w), F32) * si,   # x, gate
+        "conv_w": jax.random.normal(ks[1], (4, w), F32) * 0.1,
+        "conv_b": jnp.zeros((w,), F32),
+        "wr": jax.random.normal(ks[2], (w, w), F32) * sw,
+        "wi": jax.random.normal(ks[3], (w, w), F32) * sw,
+        "lam": jnp.full((w,), 2.0, F32),   # softplus(2) ~ 2.1 -> slow decay
+        "out_proj": jax.random.normal(ks[4], (w, d), F32) * sw,
+    }
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", u, p["wr"].astype(BF16))
+                       .astype(F32))
+    i = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", u, p["wi"].astype(BF16))
+                       .astype(F32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (B,L,W)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u.astype(F32))
+    return a, gated
+
+
+def rglru_apply(p, x, cfg, *, chunk: int = 256, state=None, return_state=False):
+    b, s_len, d = x.shape
+    w = cfg.lru_width or d
+    xg = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(BF16))
+    u, g = jnp.split(xg, 2, axis=-1)
+
+    upad = jnp.pad(u, ((0, 0), (3, 0), (0, 0)))
+    conv = sum(upad[:, i:i + s_len] * p["conv_w"][i].astype(BF16)
+               for i in range(4)) + p["conv_b"].astype(BF16)
+    u = conv
+
+    if state is None:
+        state = jnp.zeros((b, w), F32)
+
+    nch = max(1, s_len // chunk)
+    ch = s_len // nch
+    uc = u.reshape(b, nch, ch, w).transpose(1, 0, 2, 3)
+
+    def outer(st, ut):
+        a, gated = _gates(p, ut)
+
+        def combine(x1, x2):
+            a1, b1 = x1
+            a2, b2 = x2
+            return a1 * a2, b1 * a2 + b2
+
+        cA, cB = jax.lax.associative_scan(combine, (a, gated), axis=1)
+        h = cA * st[:, None] + cB
+        return h[:, -1], h
+
+    state, hs = jax.lax.scan(outer, state, uc)
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s_len, w)
+    y = h.astype(BF16) * jax.nn.gelu(g.astype(F32)).astype(BF16)
+    out = jnp.einsum("bsw,wd->bsd", y, p["out_proj"].astype(BF16))
+    if return_state:
+        return out, state
+    return out
+
+
+def init_rglru_cache(cfg, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return {"conv": jnp.zeros((batch, 3, w), BF16),
+            "h": jnp.zeros((batch, w), F32)}
+
+
+def rglru_decode(p, x, cache, cfg):
+    b = x.shape[0]
+    w = cfg.lru_width or cfg.d_model
+    xg = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(BF16))
+    u, g = jnp.split(xg, 2, axis=-1)                      # (B,1,W)
+    win = jnp.concatenate([cache["conv"], u], axis=1)     # (B,4,W)
+    conv = sum(win[:, i] * p["conv_w"][i].astype(BF16)
+               for i in range(4)) + p["conv_b"].astype(BF16)
+    u1 = conv[:, None]
+    a, gated = _gates(p, u1)
+    h = a[:, 0] * cache["h"] + gated[:, 0]
+    y = h[:, None].astype(BF16) * jax.nn.gelu(g.astype(F32)).astype(BF16)
+    out = jnp.einsum("bsw,wd->bsd", y, p["out_proj"].astype(BF16))
+    return out, {"conv": win[:, 1:], "h": h}

@@ -1,0 +1,168 @@
+"""Model stack: init / train / prefill / decode over scanned segments."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import blocks
+from .layers import BF16, F32, embed_lookup, rms_norm
+
+REMAT_POLICIES = {
+    "full": None,                                    # save nothing extra
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "everything": jax.checkpoint_policies.everything_saveable,
+}
+
+
+def init_params(key, cfg, tp: int = 1) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.vocab_size
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(ks[0], (v, d), F32) * (d ** -0.5),
+        "final_norm": jnp.zeros((d,), F32),
+    }
+    for si, (pattern, n) in enumerate(blocks.plan_segments(cfg)):
+        params[f"seg{si}"] = blocks.init_segment(ks[si + 1], pattern, n, cfg, tp)
+    return params
+
+
+def abstract_params(cfg, tp: int = 1):
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg, tp), jax.random.key(0))
+
+
+def _input_embeds(params, batch, cfg):
+    if cfg.embed_stub and "frames" in batch:
+        return batch["frames"].astype(BF16)
+    return embed_lookup(params["embed"], batch["tokens"])
+
+
+def _remat(fn, policy: Optional[str]):
+    if policy is None:
+        return fn
+    pol = REMAT_POLICIES[policy]
+    return jax.checkpoint(fn, policy=pol) if pol is not None else jax.checkpoint(fn)
+
+
+def forward_train(params, batch, cfg, tp: int = 1,
+                  remat_policy: Optional[str] = "full"):
+    """batch: tokens/frames (+labels, +image_embeds) -> (logits, aux_loss)."""
+    x = _input_embeds(params, batch, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    img = batch.get("image_embeds")
+    if img is not None:
+        img = img.astype(BF16)
+    aux = jnp.zeros((), F32)
+
+    for si, (pattern, n) in enumerate(blocks.plan_segments(cfg)):
+        def block(carry, p, _pattern=pattern):
+            xx, ax = carry
+            for i, kind in enumerate(_pattern):
+                xx, a = blocks.apply_layer_train(kind, p[f"sub{i}"], xx,
+                                                 positions, cfg, tp, img)
+                ax = ax + a
+            return (xx, ax), None
+
+        (x, aux), _ = jax.lax.scan(_remat(block, remat_policy), (x, aux),
+                                   params[f"seg{si}"])
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(BF16))
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg, tp: int = 1,
+            remat_policy: Optional[str] = "full"):
+    """Cross-entropy, safe under vocab-sharded logits (reductions over V
+    stay small collectives; the one-hot gather fuses)."""
+    logits, aux = forward_train(params, batch, cfg, tp, remat_policy)
+    logits = logits.astype(F32)
+    labels = batch["labels"]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(labels, cfg.vocab_size, dtype=F32)
+    tgt = jnp.sum(logits * onehot, axis=-1)
+    nll = jnp.mean(lse - tgt)
+    if cfg.moe is not None:
+        nll = nll + cfg.moe.aux_loss_weight * aux
+    return nll
+
+
+# ---- serving ------------------------------------------------------------------
+
+def init_caches(cfg, batch: int, max_seq: int, tp: int = 1):
+    spec = attn.cache_spec(cfg, max_seq)
+    caches = {}
+    for si, (pattern, n) in enumerate(blocks.plan_segments(cfg)):
+        def one(_, _pattern=pattern):
+            return {f"sub{i}": blocks.init_layer_cache(kind, cfg, spec, batch, tp)
+                    for i, kind in enumerate(_pattern)}
+        caches[f"seg{si}"] = jax.vmap(one)(jnp.arange(n))
+    return caches
+
+
+def abstract_caches(cfg, batch: int, max_seq: int, tp: int = 1):
+    return jax.eval_shape(
+        functools.partial(init_caches, cfg, batch, max_seq, tp))
+
+
+def forward_prefill(params, batch, cfg, max_seq: int, tp: int = 1,
+                    remat_policy: Optional[str] = None):
+    """Prompt -> (last-token logits, caches)."""
+    x = _input_embeds(params, batch, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    img = batch.get("image_embeds")
+    if img is not None:
+        img = img.astype(BF16)
+    spec = attn.cache_spec(cfg, max_seq)
+    caches = {}
+
+    for si, (pattern, n) in enumerate(blocks.plan_segments(cfg)):
+        def block(xx, p, _pattern=pattern):
+            cs = {}
+            for i, kind in enumerate(_pattern):
+                xx, c = blocks.apply_layer_prefill(kind, p[f"sub{i}"], xx,
+                                                   positions, cfg, tp, spec, img)
+                cs[f"sub{i}"] = c
+            return xx, cs
+
+        x, caches[f"seg{si}"] = jax.lax.scan(_remat(block, remat_policy), x,
+                                             params[f"seg{si}"])
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"].astype(BF16))
+    return logits, caches
+
+
+def forward_decode(params, batch, caches, cfg, max_seq: int, tp: int = 1):
+    """One-token step: batch = {token (B,), pos (B,)} -> (logits, caches)."""
+    tok = batch["token"]
+    pos = batch["pos"]
+    x = embed_lookup(params["embed"], tok[:, None])
+    spec = attn.cache_spec(cfg, max_seq)
+    new_caches = {}
+
+    for si, (pattern, n) in enumerate(blocks.plan_segments(cfg)):
+        def block(xx, pc, _pattern=pattern):
+            p, cache = pc
+            cs = {}
+            for i, kind in enumerate(_pattern):
+                xx, c = blocks.apply_layer_decode(kind, p[f"sub{i}"], xx, pos,
+                                                  cache[f"sub{i}"], spec, cfg, tp)
+                cs[f"sub{i}"] = c
+            return xx, cs
+
+        x, new_caches[f"seg{si}"] = jax.lax.scan(
+            block, x, (params[f"seg{si}"], caches[f"seg{si}"]))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, 0], params["embed"].astype(BF16))
+    return logits, new_caches

@@ -1,0 +1,93 @@
+"""Batched serving engine with continuous-batching-style slot management.
+
+A fixed pool of `batch` slots; finished sequences release their slot and
+queued requests claim it (their prompt is prefilled into the slot's cache
+rows).  Single-host simulation of the scheduler every real serving stack
+(vLLM/JetStream) runs; the jitted decode step is the same program the
+dry-run lowers at production shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.transformer import init_caches
+from .step import make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, batch: int = 8, max_seq: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.max_seq = max_seq
+        self.caches = init_caches(cfg, batch, max_seq)
+        self.decode = jax.jit(make_decode_step(cfg, max_seq))
+        self.pos = np.zeros(batch, np.int32)
+        self.tok = np.zeros(batch, np.int32)
+        self.slots: List[Optional[Request]] = [None] * batch
+        self.queue: List[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.batch):
+            if self.slots[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[slot] = req
+                # prefill the prompt into this slot by stepping tokens
+                # (single-slot prefill keeps the engine simple; a prod
+                # deployment jits a batched prefill_step — see launch.serve)
+                for i, t in enumerate(req.prompt[:-1]):
+                    self._step_slot(slot, int(t), i)
+                self.pos[slot] = len(req.prompt) - 1
+                self.tok[slot] = int(req.prompt[-1])
+
+    def _step_slot(self, slot: int, token: int, pos: int):
+        tok = self.tok.copy()
+        ps = self.pos.copy()
+        tok[slot] = token
+        ps[slot] = pos
+        batch = {"token": jnp.asarray(tok), "pos": jnp.asarray(ps)}
+        nxt, _, self.caches = self.decode(self.params, self.caches, batch)
+        return np.asarray(nxt)
+
+    def step(self) -> int:
+        """One engine tick: admit, decode one token for all active slots."""
+        self._admit()
+        active = [s for s in range(self.batch) if self.slots[s] is not None]
+        if not active:
+            return 0
+        batch = {"token": jnp.asarray(self.tok), "pos": jnp.asarray(self.pos)}
+        nxt, _, self.caches = self.decode(self.params, self.caches, batch)
+        nxt = np.asarray(nxt)
+        for s in active:
+            req = self.slots[s]
+            req.out.append(int(nxt[s]))
+            self.pos[s] += 1
+            self.tok[s] = int(nxt[s])
+            if len(req.out) >= req.max_new or self.pos[s] >= self.max_seq - 1:
+                req.done = True
+                self.slots[s] = None
+        return len(active)
+
+    def run(self, max_ticks: int = 1000) -> int:
+        ticks = 0
+        while (self.queue or any(self.slots)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return ticks

@@ -1,0 +1,27 @@
+"""Serving steps: prefill (prompt -> cache) and decode (one token)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import forward_decode, forward_prefill
+
+
+def make_prefill_step(cfg, max_seq: int, *, tp: int = 1):
+    def prefill_step(params, batch):
+        logits, caches = forward_prefill(params, batch, cfg, max_seq, tp)
+        return logits, caches
+    return prefill_step
+
+
+def make_decode_step(cfg, max_seq: int, *, tp: int = 1, greedy: bool = True):
+    def decode_step(params, caches, batch):
+        logits, caches = forward_decode(params, batch, caches, cfg, max_seq, tp)
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, logits, caches
+    return decode_step

@@ -1,0 +1,38 @@
+"""Training state pytree."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    step: Any           # () int32
+    params: Any         # f32 master weights
+    mu: Any             # Adam first moment (ZeRO-1 sharded)
+    nu: Any             # Adam second moment (ZeRO-1 sharded)
+    error: Optional[Any] = None   # gradient-compression error feedback
+
+    def tree_flatten(self):
+        return (self.step, self.params, self.mu, self.nu, self.error), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+def init_state(params, *, compression: bool = False) -> TrainState:
+    zeros = lambda p: jax.tree.map(lambda l: jnp.zeros(l.shape, l.dtype), p)
+    err = jax.tree.map(lambda l: jnp.zeros(l.shape, jnp.float32), params) \
+        if compression else None
+    return TrainState(jnp.zeros((), jnp.int32), params, zeros(params),
+                      zeros(params), err)
+
+
+def abstract_state(abstract_params, *, compression: bool = False):
+    return jax.eval_shape(
+        lambda p: init_state(p, compression=compression), abstract_params)

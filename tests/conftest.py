@@ -1,0 +1,31 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+sys.path.insert(0, os.path.abspath(SRC))
+
+# Smoke tests and benches must see exactly 1 device (the dry-run sets its
+# own 512-device flag in a separate process).
+os.environ.pop("XLA_FLAGS", None)
+
+
+def run_devices_subprocess(code: str, num_devices: int = 8,
+                           timeout: int = 560) -> str:
+    """Run a python snippet under --xla_force_host_platform_device_count."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={num_devices}"
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def devices8():
+    return run_devices_subprocess

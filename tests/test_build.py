@@ -1,0 +1,100 @@
+"""CSR construction strategies vs the numpy oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import build, degrees
+from repro.core.types import EdgeList
+from repro.core.csr import convert_to_csr
+
+
+def _random_edges(v, e, seed=0, pad=0):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, v, e).astype(np.int32)
+    dst = rng.integers(0, v, e).astype(np.int32)
+    if pad:
+        src = np.concatenate([src, np.full(pad, -1, np.int32)])
+        dst = np.concatenate([dst, np.full(pad, -1, np.int32)])
+    return src, dst
+
+
+def _rows(offsets, targets, v):
+    off = np.asarray(offsets)
+    tgt = np.asarray(targets)
+    return [np.sort(tgt[off[u]:off[u + 1]]) for u in range(v)]
+
+
+@pytest.mark.parametrize("rho", [1, 2, 4, 7, 8])
+def test_staged_equals_global(rho):
+    v, e = 64, 1000
+    src, dst = _random_edges(v, e, seed=rho)
+    ref = build.csr_np(src, dst, None, v)
+    og, tg, _ = build.csr_global(jnp.asarray(src), jnp.asarray(dst), None, v)
+    os_, ts, _ = build.csr_staged(jnp.asarray(src), jnp.asarray(dst), None, v,
+                                  rho=rho)
+    assert np.array_equal(np.asarray(og), np.asarray(ref.offsets))
+    assert np.array_equal(np.asarray(os_), np.asarray(ref.offsets))
+    r_ref = _rows(ref.offsets, ref.targets, v)
+    for name, (o, t) in {"global": (og, tg), "staged": (os_, ts)}.items():
+        r = _rows(o, t, v)
+        for u in range(v):
+            assert np.array_equal(r[u], r_ref[u]), (name, u)
+
+
+def test_staged_handles_padding_sentinels():
+    v = 32
+    src, dst = _random_edges(v, 100, seed=3, pad=28)
+    ref = build.csr_np(src, dst, None, v)
+    o, t, _ = build.csr_staged(jnp.asarray(src), jnp.asarray(dst), None, v,
+                               rho=4)
+    assert int(o[-1]) == 100
+    r_ref = _rows(ref.offsets, ref.targets, v)
+    r = _rows(o, t, v)
+    for u in range(v):
+        assert np.array_equal(r[u], r_ref[u])
+
+
+def test_weighted_csr_keeps_edge_weight_pairing():
+    v, e = 16, 200
+    rng = np.random.default_rng(1)
+    src = rng.integers(0, v, e).astype(np.int32)
+    dst = rng.integers(0, v, e).astype(np.int32)
+    w = rng.random(e).astype(np.float32)
+    o, t, ww = build.csr_staged(jnp.asarray(src), jnp.asarray(dst),
+                                jnp.asarray(w), v, rho=4, weighted=True)
+    # every (target, weight) pair within a row must be an original edge pair
+    pairs = {(int(u), int(vv), float(x)) for u, vv, x in zip(src, dst, w)}
+    off = np.asarray(o)
+    for u in range(v):
+        for j in range(off[u], off[u + 1]):
+            assert (u, int(t[j]), float(np.asarray(ww)[j])) in pairs
+
+
+def test_degree_strategies_agree():
+    v, e = 128, 5000
+    src, _ = _random_edges(v, e, seed=9, pad=17)
+    ref = degrees.degrees_np(src, v)
+    a = degrees.degrees_global(jnp.asarray(src), v)
+    b = degrees.combine_degrees(degrees.degrees_partitioned(jnp.asarray(src), v, 4))
+    c = degrees.degrees_sort(jnp.asarray(src), v)
+    for x in (a, b, c):
+        assert np.array_equal(np.asarray(x), ref)
+
+
+def test_offsets_from_degrees():
+    deg = jnp.asarray([3, 0, 2, 5], jnp.int32)
+    off = degrees.offsets_from_degrees(deg, 4)
+    assert np.asarray(off).tolist() == [0, 3, 3, 5, 10]
+
+
+def test_convert_to_csr_engines_match():
+    v, e = 48, 400
+    src, dst = _random_edges(v, e, seed=5)
+    el = EdgeList(src, dst, None, np.int64(e), v)
+    a = convert_to_csr(el, method="staged", rho=4)
+    b = convert_to_csr(el, engine="numpy")
+    assert np.array_equal(np.asarray(a.offsets, np.int64),
+                          np.asarray(b.offsets))
+    ra, rb = _rows(a.offsets, a.targets, v), _rows(b.offsets, b.targets, v)
+    for u in range(v):
+        assert np.array_equal(ra[u], rb[u])

@@ -1,0 +1,193 @@
+"""Distributed GVEL loader + sharding rules under 8 host devices."""
+import numpy as np
+import pytest
+
+
+def test_sharded_csr_matches_oracle(devices8, tmp_path):
+    code = f"""
+import numpy as np, jax
+from jax.sharding import AxisType
+from repro.core import (make_graph_file, host_shard_and_load,
+                        read_edgelist_numpy, convert_to_csr)
+
+path = r"{tmp_path}/g.el"
+v, e = make_graph_file(path, "rmat", scale=9, edge_factor=8, seed=5)
+mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+csr = host_shard_and_load(mesh, "data", path, num_vertices=v)
+off = np.asarray(csr.offsets); tgt = np.asarray(csr.targets)
+rows = off.shape[1] - 1
+oc = convert_to_csr(read_edgelist_numpy(path, num_vertices=v), engine="numpy")
+oo, ot = np.asarray(oc.offsets), np.asarray(oc.targets)
+tot = 0
+for k in range(8):
+    for r in range(rows):
+        u = k * rows + r
+        if u >= v:
+            break
+        mine = np.sort(tgt[k, off[k, r]:off[k, r + 1]])
+        ref = np.sort(ot[oo[u]:oo[u + 1]])
+        assert np.array_equal(mine, ref), (k, r)
+        tot += len(ref)
+assert tot == e
+print("SHARDED-CSR-OK", tot)
+"""
+    assert "SHARDED-CSR-OK" in devices8(code)
+
+
+def test_weighted_sharded_csr(devices8, tmp_path):
+    code = f"""
+import numpy as np, jax
+from jax.sharding import AxisType
+from repro.core.generate import write_edgelist
+from repro.core import host_shard_and_load
+rng = np.random.default_rng(1)
+v, e = 64, 500
+src = rng.integers(0, v, e); dst = rng.integers(0, v, e)
+w = (rng.random(e) * 10).round(3).astype(np.float32)
+path = r"{tmp_path}/w.el"
+write_edgelist(path, src, dst, w)
+mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+csr = host_shard_and_load(mesh, "data", path, num_vertices=v, weighted=True)
+off = np.asarray(csr.offsets); tgt = np.asarray(csr.targets)
+ww = np.asarray(csr.weights)
+pairs = {{(int(a), int(b), round(float(c), 3)) for a, b, c in zip(src, dst, w)}}
+rows = off.shape[1] - 1
+seen = 0
+for k in range(8):
+    for r in range(rows):
+        u = k * rows + r
+        if u >= v: break
+        for j in range(off[k, r], off[k, r + 1]):
+            assert (u, int(tgt[k, j]), round(float(ww[k, j]), 3)) in pairs
+            seen += 1
+assert seen == e
+print("WEIGHTED-OK", seen)
+"""
+    assert "WEIGHTED-OK" in devices8(code)
+
+
+def test_param_shardings_cover_zoo(devices8):
+    """Every arch's param tree gets valid NamedShardings on a (4,2) mesh
+    and a jitted forward lowers with them."""
+    code = """
+import jax, numpy as np
+from jax.sharding import AxisType
+from repro.configs import ARCHS, reduced_config
+from repro.distributed import sharding as shd
+from repro.models import abstract_params
+
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+for name in ARCHS:
+    cfg = reduced_config(name)
+    ap = abstract_params(cfg, tp=2)
+    sh = shd.param_shardings(ap, cfg, mesh, fsdp=True)
+    n = len(jax.tree.leaves(sh))
+    assert n == len(jax.tree.leaves(ap))
+print("PSPECS-OK")
+"""
+    assert "PSPECS-OK" in devices8(code)
+
+
+def test_compressed_allreduce_roundtrip(devices8):
+    """Wire-efficient int8 all-reduce (all_to_all + all_gather) vs f32."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType, PartitionSpec as P
+from repro.distributed.compression import compressed_allreduce, compressed_psum
+
+mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+x = jnp.arange(8 * 33, dtype=jnp.float32).reshape(8, 33) / 7.0  # odd: pad path
+
+def body(xs):
+    return compressed_allreduce(xs[0], "data", 8)[None]
+
+y = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("data"),
+                          out_specs=P("data"), check_vma=False))(x)
+ref = np.broadcast_to(np.asarray(x).sum(0, keepdims=True), (8, 33))
+err = np.abs(np.asarray(y) - ref).max() / np.abs(ref).max()
+assert err < 0.03, err       # two int8 quantizations
+
+def body2(xs):
+    return compressed_psum(xs, "data")
+y2 = jax.jit(jax.shard_map(body2, mesh=mesh, in_specs=P("data"),
+                           out_specs=P("data"), check_vma=False))(x)
+err2 = np.abs(np.asarray(y2) - ref).max() / np.abs(ref).max()
+assert err2 < 0.01, err2
+print("CPSUM-OK", float(err), float(err2))
+"""
+    assert "CPSUM-OK" in devices8(code)
+
+
+def test_local_accum_step_parity(devices8):
+    """shard_map local-grad accumulation == GSPMD reference step."""
+    code = """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.configs import reduced_config
+from repro.models import init_params
+from repro.train.optimizer import OptimizerConfig
+from repro.train.state import init_state
+from repro.train.step import make_train_step, make_local_accum_train_step
+
+cfg = reduced_config("phi4-mini-3.8b")
+oc = OptimizerConfig(lr=1e-3, warmup_steps=1, decay_steps=50)
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+params = init_params(jax.random.key(0), cfg)
+toks = jax.random.randint(jax.random.key(7), (8, 33), 0, cfg.vocab_size)
+batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+s_ref, _ = jax.jit(make_train_step(cfg, oc, accum_steps=2))(
+    init_state(params), batch)
+with mesh:
+    s_new, m = jax.jit(make_local_accum_train_step(
+        cfg, oc, mesh, accum_steps=2))(init_state(params), batch)
+for a, b in zip(jax.tree.leaves(s_ref.params), jax.tree.leaves(s_new.params)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=3e-3, atol=3e-5)
+# int8 wire-compressed variant trains (loss drops over 5 steps)
+with mesh:
+    sq = init_state(params)
+    stq = jax.jit(make_local_accum_train_step(cfg, oc, mesh, accum_steps=2,
+                                              int8_allreduce=True))
+    losses = []
+    for _ in range(5):
+        sq, mq = stq(sq, batch)
+        losses.append(float(mq["loss"]))
+assert losses[-1] < losses[0]
+print("LOCAL-ACCUM-OK")
+"""
+    assert "LOCAL-ACCUM-OK" in devices8(code)
+
+
+def test_zero1_local_step_parity(devices8):
+    """ZeRO-sharded manual-DP step == GSPMD reference (params after 1 step)."""
+    code = """
+import numpy as np, jax
+from jax.sharding import AxisType
+from repro.configs import reduced_config
+from repro.models import init_params
+from repro.train.optimizer import OptimizerConfig
+from repro.train.state import init_state
+from repro.train.step import (make_train_step, make_local_accum_train_step,
+                              make_zero1_local_state)
+
+cfg = reduced_config("phi4-mini-3.8b")
+oc = OptimizerConfig(lr=1e-3, warmup_steps=1, decay_steps=50)
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+params = init_params(jax.random.key(0), cfg)
+toks = jax.random.randint(jax.random.key(7), (8, 33), 0, cfg.vocab_size)
+batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+s_ref, _ = jax.jit(make_train_step(cfg, oc, accum_steps=2))(
+    init_state(params), batch)
+with mesh:
+    sz = make_zero1_local_state(params, 4)
+    stz = jax.jit(make_local_accum_train_step(cfg, oc, mesh, accum_steps=2,
+                                              zero1=True))
+    sz, _ = stz(sz, batch)
+for a, b in zip(jax.tree.leaves(s_ref.params), jax.tree.leaves(sz.params)):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=5e-3, atol=5e-5)
+print("ZERO1-OK")
+"""
+    assert "ZERO1-OK" in devices8(code)

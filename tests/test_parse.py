@@ -1,0 +1,136 @@
+"""Unit tests: vectorized parsers (jnp device path + numpy host path)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.parse import parse_block, parse_blocks, compact_edges
+from repro.core.parse_np import chunk_bounds, parse_chunk_np
+
+
+def _pad(text: bytes, mult: int = 64) -> np.ndarray:
+    buf = np.frombuffer(text, np.uint8)
+    pad = (-len(buf)) % mult
+    return np.concatenate([buf, np.full(pad, 10, np.uint8)])
+
+
+ALLOWED = set(b"0123456789.- \t\r")
+
+
+def _oracle(text: bytes, weighted=False, base=1):
+    src, dst, w = [], [], []
+    for line in text.split(b"\n"):
+        # GVEL semantics: any line with a byte outside the edge grammar
+        # (comments, junk) is rejected wholesale
+        if any(c not in ALLOWED for c in line):
+            continue
+        parts = line.split()
+        if len(parts) < 2:
+            continue
+        src.append(int(parts[0]) - base)
+        dst.append(int(parts[1]) - base)
+        w.append(float(parts[2]) if weighted and len(parts) > 2 else 1.0)
+    return src, dst, w
+
+
+CASES = [
+    b"1 2\n3 4\n",
+    b"1 2\n\n\n3 4\n",                      # blank lines
+    b"10 20\n% comment 5 5\n30 40\n",       # comment rejected
+    b"1\t2\n3  4\n5 6",                     # tabs, multi-space, no trailing nl
+    b"999999999 1\n1 999999999\n",          # 9-digit ids
+    b"1 2 extra tokens 3\n",                # extra junk -> bad line
+]
+
+
+@pytest.mark.parametrize("text", CASES)
+def test_parse_block_matches_oracle(text):
+    buf = _pad(text)
+    s, d, w, c = parse_block(jnp.asarray(buf), jnp.int32(0),
+                             jnp.int32(len(buf)), weighted=False, base=1,
+                             edge_cap=32)
+    es, ed, _ = _oracle(text)
+    assert int(c) == len(es)
+    assert np.asarray(s[:len(es)]).tolist() == es
+    assert np.asarray(d[:len(ed)]).tolist() == ed
+
+
+@pytest.mark.parametrize("text", CASES)
+def test_parse_np_matches_oracle(text):
+    s, d, w, c = parse_chunk_np(np.frombuffer(text, np.uint8), weighted=False)
+    es, ed, _ = _oracle(text)
+    assert c == len(es)
+    assert s.tolist() == es and d.tolist() == ed
+
+
+def test_weighted_floats():
+    text = b"1 2 0.5\n2 3 -1.25\n3 4 7\n4 5 12.0625\n"
+    buf = _pad(text)
+    s, d, w, c = parse_block(jnp.asarray(buf), jnp.int32(0),
+                             jnp.int32(len(buf)), weighted=True, base=1,
+                             edge_cap=16)
+    assert int(c) == 4
+    np.testing.assert_allclose(np.asarray(w[:4]), [0.5, -1.25, 7.0, 12.0625],
+                               rtol=1e-6)
+    s2, d2, w2, c2 = parse_chunk_np(np.frombuffer(text, np.uint8),
+                                    weighted=True)
+    np.testing.assert_allclose(w2, [0.5, -1.25, 7.0, 12.0625], rtol=1e-12)
+
+
+def test_missing_weight_defaults_to_one():
+    text = b"1 2\n2 3 4.5\n"
+    buf = _pad(text)
+    s, d, w, c = parse_block(jnp.asarray(buf), jnp.int32(0),
+                             jnp.int32(len(buf)), weighted=True, base=1,
+                             edge_cap=8)
+    np.testing.assert_allclose(np.asarray(w[:2]), [1.0, 4.5])
+
+
+def test_zero_based_ids():
+    text = b"0 1\n1 2\n"
+    buf = _pad(text)
+    s, d, _, c = parse_block(jnp.asarray(buf), jnp.int32(0),
+                             jnp.int32(len(buf)), weighted=False, base=0,
+                             edge_cap=8)
+    assert np.asarray(s[:2]).tolist() == [0, 1]
+
+
+def test_ownership_partition_is_exact():
+    """Every line owned by exactly one block for any beta."""
+    rng = np.random.default_rng(0)
+    lines = [f"{rng.integers(1, 99)} {rng.integers(1, 99)}" for _ in range(200)]
+    text = ("\n".join(lines) + "\n").encode()
+    data = np.frombuffer(text, np.uint8)
+    for beta in (16, 64, 256):
+        ov = 32
+        total = 0
+        nb = -(-len(data) // beta)
+        for i in range(nb):
+            lo = i * beta - ov
+            buf = np.full(ov + beta, 10, np.uint8)
+            s, e = max(lo, 0), min(i * beta + beta, len(data))
+            buf[s - lo:e - lo] = data[s:e]
+            _, _, _, c = parse_block(jnp.asarray(buf), jnp.int32(ov),
+                                     jnp.int32(ov + beta), weighted=False,
+                                     base=1, edge_cap=ov + beta)
+            total += int(c)
+        assert total == 200, beta
+
+
+def test_compact_edges_packs_counts():
+    bufs = jnp.asarray(np.stack([_pad(b"1 2\n3 4\n"), _pad(b"5 6\n")]))
+    os_ = jnp.zeros(2, jnp.int32)
+    oe = jnp.full(2, bufs.shape[1], jnp.int32)
+    s, d, w, c = parse_blocks(bufs, os_, oe, weighted=False, base=1,
+                              edge_cap=8)
+    cs, cd, _, tot = compact_edges(s, d, None, c, 16)
+    assert int(tot) == 3
+    assert np.asarray(cs[:3]).tolist() == [0, 2, 4]
+
+
+def test_chunk_bounds_newline_aligned():
+    text = b"11 22\n33 44\n55 66\n77 88\n"
+    data = np.frombuffer(text, np.uint8)
+    bounds = chunk_bounds(data, 3)
+    assert bounds[0][0] == 0 and bounds[-1][1] == len(data)
+    for lo, hi in bounds[:-1]:
+        assert hi == 0 or data[hi - 1] == 10   # cuts at newline

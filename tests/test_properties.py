@@ -1,0 +1,96 @@
+"""Hypothesis property tests for the GVEL loading invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build
+from repro.core.parse import parse_block
+from repro.core.parse_np import parse_chunk_np
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+edges_st = st.lists(
+    st.tuples(st.integers(0, 9999), st.integers(0, 9999)),
+    min_size=0, max_size=120)
+
+
+def _render(edges, base=1, sep_choices=(" ", "\t", "  ")):
+    rng = np.random.default_rng(len(edges))
+    lines = []
+    for u, v in edges:
+        sep = sep_choices[rng.integers(0, len(sep_choices))]
+        lines.append(f"{u + base}{sep}{v + base}")
+    return ("\n".join(lines) + ("\n" if lines else "")).encode()
+
+
+@given(edges_st)
+def test_roundtrip_text_to_edges_numpy(edges):
+    text = _render(edges)
+    s, d, _, c = parse_chunk_np(np.frombuffer(text, np.uint8), weighted=False)
+    assert c == len(edges)
+    assert list(zip(s.tolist(), d.tolist())) == edges
+
+
+@given(edges_st)
+def test_roundtrip_text_to_edges_jax(edges):
+    text = _render(edges)
+    buf = np.frombuffer(text, np.uint8)
+    pad = (-len(buf)) % 64 or 64
+    buf = np.concatenate([buf, np.full(pad, 10, np.uint8)])
+    s, d, _, c = parse_block(jnp.asarray(buf), jnp.int32(0),
+                             jnp.int32(len(buf)), weighted=False, base=1,
+                             edge_cap=max(len(edges) + 2, 4))
+    assert int(c) == len(edges)
+    got = list(zip(np.asarray(s[:len(edges)]).tolist(),
+                   np.asarray(d[:len(edges)]).tolist()))
+    assert got == edges
+
+
+@given(st.lists(st.floats(min_value=-999, max_value=999,
+                          allow_nan=False).map(lambda x: round(x, 3)),
+                min_size=1, max_size=50))
+def test_roundtrip_weights(ws):
+    text = "".join(f"1 2 {w}\n" for w in ws).encode()
+    s, d, w, c = parse_chunk_np(np.frombuffer(text, np.uint8), weighted=True)
+    assert c == len(ws)
+    np.testing.assert_allclose(w, ws, rtol=1e-9, atol=1e-9)
+
+
+@given(edges_st.filter(lambda e: len(e) > 0),
+       st.integers(min_value=1, max_value=9))
+def test_csr_invariants(edges, rho):
+    v = 64
+    src = np.asarray([u % v for u, _ in edges], np.int32)
+    dst = np.asarray([w % v for _, w in edges], np.int32)
+    off, tgt, _ = build.csr_staged(jnp.asarray(src), jnp.asarray(dst), None,
+                                   v, rho=rho)
+    off = np.asarray(off)
+    # invariant 1: offsets monotone, start 0, end |E|
+    assert off[0] == 0 and off[-1] == len(edges)
+    assert (np.diff(off) >= 0).all()
+    # invariant 2: degree sums match bincount
+    assert np.array_equal(np.diff(off), np.bincount(src, minlength=v))
+    # invariant 3: per-row multiset equality vs oracle
+    ref = build.csr_np(src, dst, None, v)
+    roff = np.asarray(ref.offsets)
+    for u in range(v):
+        assert np.array_equal(np.sort(np.asarray(tgt[off[u]:off[u + 1]])),
+                              np.sort(np.asarray(ref.targets[roff[u]:roff[u + 1]])))
+
+
+@given(edges_st, st.integers(min_value=1, max_value=6))
+def test_staged_partition_count_invariance(edges, rho):
+    """The CSR must not depend on the partition count (GVEL Fig. 4 knob)."""
+    v = 32
+    src = np.asarray([u % v for u, _ in edges] or [0], np.int32)
+    dst = np.asarray([w % v for _, w in edges] or [0], np.int32)
+    o1, t1, _ = build.csr_staged(jnp.asarray(src), jnp.asarray(dst), None, v,
+                                 rho=1)
+    o2, t2, _ = build.csr_staged(jnp.asarray(src), jnp.asarray(dst), None, v,
+                                 rho=rho)
+    assert np.array_equal(np.asarray(o1), np.asarray(o2))
+    o1 = np.asarray(o1)
+    for u in range(v):
+        assert np.array_equal(np.sort(np.asarray(t1[o1[u]:o1[u + 1]])),
+                              np.sort(np.asarray(t2[o1[u]:o1[u + 1]])))
