@@ -1,0 +1,66 @@
+"""End-to-end ``load_csr``: streaming fused device engine vs the old
+batch round-trip pipeline, same input.
+
+The baseline below reproduces the pre-loader device path verbatim:
+synchronous block staging, jitted parse, a device->host copy of every
+batch, ``np.concatenate``, a host EdgeList, and only then a device CSR
+build.  The streaming path (``loader.load_csr(engine="device")``)
+double-buffers staging behind the parse dispatch and accumulates every
+batch in a packed device buffer that feeds the CSR build directly.
+"""
+import numpy as np
+
+from .common import dataset, emit, timeit
+
+
+def _batch_roundtrip_csr(path, v, *, beta=256 * 1024, overlap=64,
+                         batch_blocks=8):
+    """The old pipeline: per-batch host round-trip + EdgeList detour."""
+    import jax.numpy as jnp
+    from repro.core.blocks import owned_range, plan_blocks, stage_blocks
+    from repro.core.csr import convert_to_csr
+    from repro.core.parse import compact_edges, parse_blocks
+    from repro.core.types import EdgeList
+
+    data = np.memmap(path, dtype=np.uint8, mode="r")
+    plan = plan_blocks(len(data), beta=beta, overlap=overlap)
+    os_, oe = owned_range(plan)
+    edge_cap = plan.edge_cap
+    total_cap = batch_blocks * edge_cap
+    chunks_src, chunks_dst = [], []
+    total = 0
+    for start in range(0, plan.num_blocks, batch_blocks):
+        ids = np.arange(start, min(start + batch_blocks, plan.num_blocks))
+        bufs = stage_blocks(data, plan, ids)
+        if len(ids) < batch_blocks:
+            pad = np.full((batch_blocks - len(ids), plan.buf_len), 10, np.uint8)
+            bufs = np.concatenate([bufs, pad])
+        ostart = jnp.full((batch_blocks,), os_, jnp.int32)
+        oend = jnp.full((batch_blocks,), oe, jnp.int32)
+        src_b, dst_b, w_b, counts = parse_blocks(
+            jnp.asarray(bufs), ostart, oend,
+            weighted=False, base=1, edge_cap=edge_cap)
+        src, dst, w, n = compact_edges(src_b, dst_b, w_b, counts, total_cap)
+        n = int(n)
+        chunks_src.append(np.asarray(src[:n]))     # device -> host, every batch
+        chunks_dst.append(np.asarray(dst[:n]))
+        total += n
+    el = EdgeList(np.concatenate(chunks_src), np.concatenate(chunks_dst),
+                  None, np.int64(total), v)
+    return convert_to_csr(el, method="staged", rho=4)
+
+
+def run():
+    from repro.core import load_csr
+
+    path, v, e = dataset("web_rmat")
+    t_old = timeit(lambda: _batch_roundtrip_csr(path, v), repeat=3)
+    t_new = timeit(lambda: load_csr(path, engine="device", num_vertices=v,
+                                    method="staged"), repeat=3)
+    emit("e2e.load_csr_batch_roundtrip", t_old, f"edges_per_s={e / t_old:.3e}")
+    emit("e2e.load_csr_streaming", t_new,
+         f"edges_per_s={e / t_new:.3e};speedup={t_old / t_new:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

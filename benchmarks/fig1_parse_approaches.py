@@ -11,7 +11,7 @@ from .common import dataset, emit, timeit
 
 
 def run():
-    from repro.core import baselines, read_edgelist, read_edgelist_numpy
+    from repro.core import baselines, load_edgelist
     path, v, e = dataset("web_rmat")
 
     cases = {
@@ -21,10 +21,10 @@ def run():
             path, num_vertices=v),
         "fig1.pigo_twopass": lambda: baselines.read_edgelist_pigo(
             path, num_vertices=v),
-        "fig1.gvel_numpy": lambda: read_edgelist_numpy(
-            path, num_vertices=v),
-        "fig1.gvel_jax": lambda: read_edgelist(
-            path, num_vertices=v, beta=256 * 1024),
+        "fig1.gvel_numpy": lambda: load_edgelist(
+            path, engine="numpy", num_vertices=v),
+        "fig1.gvel_jax": lambda: load_edgelist(
+            path, engine="device", num_vertices=v, beta=256 * 1024),
     }
     base = None
     for name, fn in cases.items():

@@ -3,10 +3,11 @@ from .common import dataset, emit, timeit
 
 
 def run():
-    from repro.core import read_edgelist
+    from repro.core import load_edgelist
     path, v, e = dataset("web_rmat")
     for beta in [4 << 10, 16 << 10, 64 << 10, 256 << 10, 1 << 20]:
-        t = timeit(lambda b=beta: read_edgelist(path, num_vertices=v, beta=b),
+        t = timeit(lambda b=beta: load_edgelist(path, engine="device",
+                                                num_vertices=v, beta=b),
                    repeat=2)
         emit(f"fig2.beta_{beta // 1024}k", t, f"edges_per_s={e / t:.3e}")
 

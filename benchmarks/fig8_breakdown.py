@@ -3,12 +3,13 @@ from .common import DATASETS, dataset, emit, timeit
 
 
 def run():
-    from repro.core import convert_to_csr, read_edgelist_numpy
+    from repro.core import convert_to_csr, load_edgelist
 
     for ds in DATASETS:
         path, v, e = dataset(ds)
-        el = read_edgelist_numpy(path, num_vertices=v)
-        t_el = timeit(lambda: read_edgelist_numpy(path, num_vertices=v))
+        el = load_edgelist(path, engine="numpy", num_vertices=v)
+        t_el = timeit(lambda: load_edgelist(path, engine="numpy",
+                                            num_vertices=v))
         t_c = timeit(lambda: convert_to_csr(el, method="staged", rho=4,
                                             engine="numpy"))
         emit(f"fig8.{ds}.edgelist", t_el,

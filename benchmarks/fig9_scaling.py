@@ -15,20 +15,20 @@ from .common import dataset, emit, timeit
 
 
 def run():
+    from repro.core import load_edgelist
     from repro.core.build import csr_staged_np
-    from repro.core.edgelist import read_edgelist_threads
 
     path, v, e = dataset("web_rmat")
     cores = os.cpu_count()
-    el = read_edgelist_threads(path, num_vertices=v, num_workers=1)
+    el = load_edgelist(path, engine="threads", num_vertices=v, num_workers=1)
     n = int(el.num_edges)
     src = np.asarray(el.src[:n])
     dst = np.asarray(el.dst[:n])
 
     base_el = base_csr = None
     for w in [1, 2, 4, 8, 16]:
-        t_el = timeit(lambda ww=w: read_edgelist_threads(
-            path, num_vertices=v, num_workers=ww), repeat=2)
+        t_el = timeit(lambda ww=w: load_edgelist(
+            path, engine="threads", num_vertices=v, num_workers=ww), repeat=2)
         t_csr = timeit(lambda ww=w: csr_staged_np(
             src, dst, None, v, rho=max(4, ww), num_workers=ww), repeat=2)
         base_el = base_el or t_el

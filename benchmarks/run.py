@@ -10,9 +10,9 @@ from __future__ import annotations
 
 import sys
 
-from . import (fig1_parse_approaches, fig2_block_size, fig3_strategies,
-               fig4_partitions, fig5_csr_frameworks, fig7_edgelist,
-               fig8_breakdown, fig9_scaling)
+from . import (e2e_load_csr, fig1_parse_approaches, fig2_block_size,
+               fig3_strategies, fig4_partitions, fig5_csr_frameworks,
+               fig7_edgelist, fig8_breakdown, fig9_scaling)
 
 SUITES = {
     "fig1": fig1_parse_approaches.run,
@@ -23,6 +23,7 @@ SUITES = {
     "fig7": fig7_edgelist.run,
     "fig8": fig8_breakdown.run,
     "fig9": fig9_scaling.run,
+    "e2e": e2e_load_csr.run,
 }
 
 

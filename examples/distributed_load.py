@@ -12,7 +12,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import AxisType  # noqa: E402
+from repro.core.compat import make_mesh  # noqa: E402
 
 from repro.core import host_shard_and_load, make_graph_file  # noqa: E402
 
@@ -20,7 +20,7 @@ from repro.core import host_shard_and_load, make_graph_file  # noqa: E402
 def main():
     n = len(jax.devices())
     print(f"devices: {n}")
-    mesh = jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((n,), ("data",))
 
     tmp = tempfile.mkdtemp()
     path = os.path.join(tmp, "g.el")

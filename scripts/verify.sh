@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the exact command from ROADMAP.md, run from any cwd.
+#   scripts/verify.sh            # full tier-1
+#   scripts/verify.sh -m 'not slow'   # quick loop (skips the 1M-edge test)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

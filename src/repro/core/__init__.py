@@ -1,27 +1,36 @@
 """GVEL core: fast graph loading in Edgelist and CSR formats, in JAX.
 
 Public API:
-    read_edgelist, read_edgelist_numpy   — file -> EdgeList (single pass)
+    load_edgelist, load_csr              — unified front door; pick a parse
+                                           engine by name (device | pallas |
+                                           numpy | threads)
+    register_engine, available_engines   — the loader extension point
+    read_edgelist, read_edgelist_numpy   — back-compat engine wrappers
     read_csr, convert_to_csr             — file/EdgeList -> CSR (staged)
     read_mtx, read_mtx_csr               — MatrixMarket with honored attrs
     load_csr_sharded, host_shard_and_load — multi-device vertex-partitioned CSR
     EdgeList, CSR, GraphMeta             — core types
 """
 from .types import CSR, EdgeList, GraphMeta
+from .loader import (load_edgelist, load_csr, register_engine, get_engine,
+                     available_engines, LoaderEngine)
 from .edgelist import read_edgelist, read_edgelist_numpy, symmetrize
 from .csr import convert_to_csr, read_csr, csr_to_dense
 from .mtx import read_mtx, read_mtx_csr, write_mtx
 from .generate import make_graph_file, rmat_edges, uniform_edges, grid_edges, write_edgelist
 from .distributed import load_csr_sharded, host_shard_and_load
-from . import baselines, build, degrees, parse, parse_np, blocks
+from . import baselines, build, compat, degrees, loader, parse, parse_np, blocks
 
 __all__ = [
     "CSR", "EdgeList", "GraphMeta",
+    "load_edgelist", "load_csr", "register_engine", "get_engine",
+    "available_engines", "LoaderEngine",
     "read_edgelist", "read_edgelist_numpy", "symmetrize",
     "convert_to_csr", "read_csr", "csr_to_dense",
     "read_mtx", "read_mtx_csr", "write_mtx",
     "make_graph_file", "rmat_edges", "uniform_edges", "grid_edges",
     "write_edgelist",
     "load_csr_sharded", "host_shard_and_load",
-    "baselines", "build", "degrees", "parse", "parse_np", "blocks",
+    "baselines", "build", "compat", "degrees", "loader", "parse",
+    "parse_np", "blocks",
 ]

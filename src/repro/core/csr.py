@@ -13,7 +13,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import build, degrees
-from .edgelist import read_edgelist, read_edgelist_numpy
 from .types import CSR, EdgeList
 
 
@@ -61,11 +60,16 @@ def read_csr(
     engine: str = "jax",
     **reader_kwargs,
 ) -> CSR:
-    """File -> CSR: read per-block edgelists, then multi-stage conversion."""
-    reader = read_edgelist if engine == "jax" else read_edgelist_numpy
-    el = reader(path, weighted=weighted, symmetric=symmetric, base=base,
-                num_vertices=num_vertices, **reader_kwargs)
-    return convert_to_csr(el, method=method, rho=rho, engine=engine)
+    """File -> CSR through the unified loader (back-compat wrapper).
+
+    ``engine="jax"`` maps to the streaming ``device`` engine, whose
+    parse -> CSR path is fused on device; see loader.load_csr.
+    """
+    from .loader import load_csr
+    return load_csr(path, engine="device" if engine == "jax" else engine,
+                    weighted=weighted, symmetric=symmetric, base=base,
+                    num_vertices=num_vertices, method=method, rho=rho,
+                    **reader_kwargs)
 
 
 def csr_to_dense(csr: CSR) -> np.ndarray:

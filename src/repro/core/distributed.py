@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from . import build
+from . import build, compat
 from .types import CSR
 
 I32 = jnp.int32
@@ -146,8 +146,8 @@ def load_csr_sharded(
     specs = P(axis)
     in_specs = (specs, specs, specs if weighted else P())
     out_specs = (P(axis), P(axis), P(axis))
-    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    fn = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs)
     win = w if weighted else jnp.zeros((), jnp.float32)
     off, tgt, tw = fn(src, dst, win)
     return CSR(off, tgt, tw if weighted else None, num_vertices, row_start=0)

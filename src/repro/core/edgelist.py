@@ -1,14 +1,19 @@
 """Edgelist readers: memory-mapped file -> in-memory EdgeList.
 
-Three engines, all single-pass with over-allocated outputs (GVEL Alg. 1):
+All engines are single-pass with over-allocated outputs (GVEL Alg. 1)
+and live behind the :mod:`repro.core.loader` registry — prefer
+``loader.load_edgelist(path, engine=...)``.  This module keeps the host
+parser implementations plus back-compat wrappers:
 
-* ``read_edgelist``        — device engine: np.memmap staging -> batched
-                             jitted block parser -> packed device buffers.
-                             This is the pipeline the TPU runtime uses (the
-                             staging loop double-buffers host->device).
+* ``read_edgelist``        — thin wrapper over the loader's streaming
+                             ``device`` engine (host prefetch thread
+                             double-buffers staged blocks ahead of the
+                             jitted block parser; batches accumulate in
+                             a packed device buffer).
 * ``read_edgelist_numpy``  — host engine: the numpy single-pass vectorized
                              parser over newline-aligned chunks.  Fastest
                              pure-CPU path; benchmark subject.
+* ``read_edgelist_threads``— multithreaded host engine (GVEL's OpenMP loop).
 * baselines live in :mod:`repro.core.baselines`.
 """
 from __future__ import annotations
@@ -16,23 +21,21 @@ from __future__ import annotations
 import os
 from typing import Optional
 
-import jax.numpy as jnp
 import numpy as np
 
 from . import parse_np
-from .blocks import BlockPlan, owned_range, plan_blocks, stage_blocks
-from .parse import compact_edges, parse_blocks
 from .types import EdgeList
 
 
-def _mmap_bytes(path: str) -> np.ndarray:
+def _mmap_bytes(path: str, offset: int = 0) -> np.ndarray:
     size = os.path.getsize(path)
-    if size == 0:
+    if size <= offset:
         return np.zeros(0, np.uint8)
     # GVEL maps the file and advises WILLNEED; np.memmap is the same mmap(2)
     # under the hood and the staging loop below touches pages sequentially,
     # which triggers kernel readahead (the madvise effect).
-    return np.memmap(path, dtype=np.uint8, mode="r")
+    data = np.memmap(path, dtype=np.uint8, mode="r")
+    return data[offset:] if offset else data
 
 
 def symmetrize(el: EdgeList) -> EdgeList:
@@ -55,41 +58,12 @@ def read_edgelist(
     overlap: int = 64,
     batch_blocks: int = 8,
 ) -> EdgeList:
-    """Device engine.  beta mirrors GVEL's 256 KiB block size."""
-    data = _mmap_bytes(path)
-    plan = plan_blocks(len(data), beta=beta, overlap=overlap)
-    os_, oe = owned_range(plan)
-    edge_cap = plan.edge_cap
-    total_cap = batch_blocks * edge_cap
-
-    chunks_src, chunks_dst, chunks_w = [], [], []
-    total = 0
-    for start in range(0, plan.num_blocks, batch_blocks):
-        ids = np.arange(start, min(start + batch_blocks, plan.num_blocks))
-        bufs = stage_blocks(data, plan, ids)
-        if len(ids) < batch_blocks:  # pad batch to keep one jitted program
-            padrow = np.full((batch_blocks - len(ids), plan.buf_len), 10, np.uint8)
-            bufs = np.concatenate([bufs, padrow])
-        ostart = jnp.full((batch_blocks,), os_, jnp.int32)
-        oend = jnp.full((batch_blocks,), oe, jnp.int32)
-        src_b, dst_b, w_b, counts = parse_blocks(
-            jnp.asarray(bufs), ostart, oend,
-            weighted=weighted, base=base, edge_cap=edge_cap)
-        src, dst, w, n = compact_edges(src_b, dst_b, w_b, counts, total_cap)
-        n = int(n)
-        chunks_src.append(np.asarray(src[:n]))
-        chunks_dst.append(np.asarray(dst[:n]))
-        if weighted:
-            chunks_w.append(np.asarray(w[:n]))
-        total += n
-
-    src = np.concatenate(chunks_src) if chunks_src else np.zeros(0, np.int32)
-    dst = np.concatenate(chunks_dst) if chunks_dst else np.zeros(0, np.int32)
-    w = (np.concatenate(chunks_w) if chunks_w else np.zeros(0, np.float32)) if weighted else None
-    if num_vertices is None:
-        num_vertices = int(max(src.max(initial=-1), dst.max(initial=-1))) + 1
-    el = EdgeList(src, dst, w, np.int64(total), num_vertices)
-    return symmetrize(el) if symmetric else el
+    """Device engine (back-compat wrapper; see loader.load_edgelist)."""
+    from .loader import load_edgelist
+    return load_edgelist(path, engine="device", weighted=weighted,
+                         symmetric=symmetric, base=base,
+                         num_vertices=num_vertices, beta=beta,
+                         overlap=overlap, batch_blocks=batch_blocks)
 
 
 def read_edgelist_threads(
@@ -99,6 +73,7 @@ def read_edgelist_threads(
     symmetric: bool = False,
     base: int = 1,
     num_vertices: Optional[int] = None,
+    offset: int = 0,
     num_workers: int = 8,
     chunks_per_worker: int = 4,
 ) -> EdgeList:
@@ -112,7 +87,7 @@ def read_edgelist_threads(
     """
     from concurrent.futures import ThreadPoolExecutor
 
-    data = _mmap_bytes(path)
+    data = _mmap_bytes(path, offset)
     n_chunks = max(num_workers * chunks_per_worker,
                    len(data) // (256 * 1024))     # beta-sized: stay in L2
     bounds = parse_np.chunk_bounds(data, max(1, n_chunks))
@@ -127,10 +102,12 @@ def read_edgelist_threads(
     else:
         with ThreadPoolExecutor(num_workers) as pool:
             parts = list(pool.map(work, bounds))
-    src = np.concatenate([p[0] for p in parts]).astype(np.int32)
-    dst = np.concatenate([p[1] for p in parts]).astype(np.int32)
-    w = (np.concatenate([p[2] for p in parts]).astype(np.float32)
-         if weighted else None)
+    src = (np.concatenate([p[0] for p in parts]) if parts
+           else np.zeros(0, np.int64)).astype(np.int32)
+    dst = (np.concatenate([p[1] for p in parts]) if parts
+           else np.zeros(0, np.int64)).astype(np.int32)
+    w = ((np.concatenate([p[2] for p in parts]) if parts
+          else np.zeros(0)).astype(np.float32) if weighted else None)
     if num_vertices is None:
         num_vertices = int(max(src.max(initial=-1), dst.max(initial=-1))) + 1
     el = EdgeList(src, dst, w, np.int64(len(src)), num_vertices)
@@ -144,6 +121,7 @@ def read_edgelist_numpy(
     symmetric: bool = False,
     base: int = 1,
     num_vertices: Optional[int] = None,
+    offset: int = 0,
     chunk_bytes: int = 256 * 1024,
     num_chunks: Optional[int] = None,
 ) -> EdgeList:
@@ -154,7 +132,7 @@ def read_edgelist_numpy(
     vectorized passes resident in L2 — measured 2.7x over whole-file
     parsing on this host (see EXPERIMENTS.md fig2).
     """
-    data = _mmap_bytes(path)
+    data = _mmap_bytes(path, offset)
     n = len(data)
     if num_chunks is None:
         num_chunks = max(1, -(-n // chunk_bytes))

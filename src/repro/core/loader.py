@@ -1,0 +1,347 @@
+"""Unified streaming loader: one front door for every parse engine.
+
+This module is the single entry point for getting a graph file into
+memory — ``load_edgelist`` (file -> EdgeList) and ``load_csr``
+(file -> CSR) — with the parse backend selected by name from a registry:
+
+    ==========  ================================================
+    engine      implementation
+    ==========  ================================================
+    device      streaming double-buffered block pipeline ->
+                jitted ``parse_blocks`` -> packed device buffers
+    pallas      same pipeline, but parsing runs in the
+                ``kernels.parse_edges`` Pallas kernel
+    numpy       single-pass vectorized numpy parser (host)
+    threads     thread pool over newline-aligned chunks (host)
+    ==========  ================================================
+
+The device/pallas engines are *streaming* (GVEL's pipelined read):
+
+  1. a host prefetch thread stages the next batch of overlap-padded
+     byte blocks (``blocks.stage_blocks``) while the device parses the
+     current one — read IO and parse compute overlap, the madvise /
+     double-buffer effect the paper measures;
+  2. every parsed batch is scattered into a device-side packed edge
+     buffer at a running offset (``_accumulate_batch``) — edges never
+     round-trip through numpy between batches;
+  3. ``load_csr`` hands the packed device buffers straight to the
+     rank-based CSR builders (``build.csr_global``/``csr_staged``), so
+     file -> CSR never materializes a host-side EdgeList.
+
+New formats or backends register with :func:`register_engine`; the
+registry is the extension point for mtx/binary/compressed loaders
+(see ROADMAP.md "Open items").
+
+Engine contract: ``read_edgelist`` must return the raw (asymmetric)
+edge set; symmetrization happens once, in the front door.
+"""
+from __future__ import annotations
+
+import functools
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import build
+from .blocks import NEWLINE, owned_range, plan_blocks, stage_blocks
+from .edgelist import _mmap_bytes
+from .parse import parse_blocks
+from .types import CSR, EdgeList
+
+I32 = jnp.int32
+
+# (src, dst, weights-or-None, num_edges device scalar) — packed device
+# buffers with -1 padding past num_edges; the streaming engines' output.
+DeviceEdges = Tuple[jax.Array, jax.Array, Optional[jax.Array], jax.Array]
+
+
+@runtime_checkable
+class LoaderEngine(Protocol):
+    """A parse backend. ``read_edgelist`` is mandatory; engines that can
+    leave edges on device additionally implement ``stream`` (the fused
+    ``load_csr`` path probes for it with ``hasattr``)."""
+
+    name: str
+
+    def read_edgelist(self, path: str, *, weighted: bool, base: int,
+                      num_vertices: Optional[int], offset: int,
+                      **kw) -> EdgeList: ...
+
+
+_REGISTRY: Dict[str, "LoaderEngine"] = {}
+
+
+def register_engine(engine: LoaderEngine) -> LoaderEngine:
+    """Register an engine instance under ``engine.name`` (last wins)."""
+    _REGISTRY[engine.name] = engine
+    return engine
+
+
+def get_engine(name: str) -> LoaderEngine:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown loader engine {name!r}; available: {available_engines()}"
+        ) from None
+
+
+def available_engines() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# streaming device pipeline
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _accumulate_batch(acc_src, acc_dst, acc_w, total, src_b, dst_b, w_b,
+                      counts, *, cap: int):
+    """Scatter one batch of per-block fixed-capacity parses into the
+    packed accumulator at the running offset.
+
+    The device-side analogue of gluing per-thread edgelists: an exclusive
+    scan over per-block counts gives each block a disjoint destination
+    range starting at ``total``.  Replaces the old per-batch
+    device->numpy copy + final np.concatenate.
+    """
+    nb, bcap = src_b.shape
+    starts = total + jnp.cumsum(counts) - counts
+    within = jnp.arange(bcap, dtype=I32)[None, :]
+    valid = within < counts[:, None]
+    dest = jnp.where(valid, starts[:, None] + within, cap).reshape(-1)
+    acc_src = acc_src.at[dest].set(src_b.reshape(-1), mode="drop")
+    acc_dst = acc_dst.at[dest].set(dst_b.reshape(-1), mode="drop")
+    if acc_w is not None and w_b is not None:
+        acc_w = acc_w.at[dest].set(w_b.reshape(-1), mode="drop")
+    return acc_src, acc_dst, acc_w, total + jnp.sum(counts, dtype=I32)
+
+
+def _stream_edges(
+    path: str,
+    *,
+    weighted: bool,
+    base: int,
+    offset: int,
+    beta: int,
+    overlap: int,
+    batch_blocks: int,
+    parse: str,
+) -> Tuple[DeviceEdges, int]:
+    """File -> packed device edge buffers, double-buffered.
+
+    Returns ((src, dst, w, total), capacity).  The prefetch thread stages
+    batch i+1 while the (async-dispatched) jitted parser and accumulator
+    work on batch i, so host staging overlaps device compute.
+    """
+    data = _mmap_bytes(path, offset)
+    plan = plan_blocks(len(data), beta=beta, overlap=overlap)
+    os_, oe = owned_range(plan)
+    edge_cap = plan.edge_cap
+    num_batches = -(-plan.num_blocks // batch_blocks)
+    # GVEL over-allocation: a bytes-derived bound on the final edge count
+    # (~file_len/4 slots).  This trades device memory (~1 int32 per file
+    # byte across src+dst) for a single allocation and scatter-only
+    # accumulation; load_csr shrinks to a pow-2 prefix before sorting.
+    # Growable buffers for accelerator-memory-bound inputs are an open
+    # item (ROADMAP.md).
+    cap = plan.num_blocks * edge_cap
+    if cap > np.iinfo(np.int32).max:
+        # Scatter destinations are int32 (jax default dtype regime); a
+        # wrapped index would silently drop edges via mode="drop", so
+        # refuse loudly instead.
+        raise ValueError(
+            f"{path}: edge capacity {cap} exceeds int32 indexing for the "
+            f"streaming engine; use engine='numpy'/'threads' or shard the "
+            f"file (load_csr_sharded)")
+
+    def stage(i: int) -> np.ndarray:
+        start = i * batch_blocks
+        ids = np.arange(start, min(start + batch_blocks, plan.num_blocks))
+        bufs = stage_blocks(data, plan, ids)
+        if len(ids) < batch_blocks:    # pad batch to keep one jitted program
+            pad = np.full((batch_blocks - len(ids), plan.buf_len), NEWLINE,
+                          np.uint8)
+            bufs = np.concatenate([bufs, pad])
+        return bufs
+
+    acc_src = jnp.full((cap,), -1, I32)
+    acc_dst = jnp.full((cap,), -1, I32)
+    acc_w = jnp.zeros((cap,), jnp.float32) if weighted else None
+    total = jnp.zeros((), I32)
+    ostart = jnp.full((batch_blocks,), os_, I32)
+    oend = jnp.full((batch_blocks,), oe, I32)
+
+    with ThreadPoolExecutor(1, thread_name_prefix="loader-prefetch") as pool:
+        fut = pool.submit(stage, 0)
+        for i in range(num_batches):
+            bufs = fut.result()
+            if i + 1 < num_batches:
+                fut = pool.submit(stage, i + 1)     # double buffer
+            if parse == "pallas":
+                from ..kernels import parse_edges
+                src_b, dst_b, w_b, counts = parse_edges(
+                    jnp.asarray(bufs), os_, oe, weighted=weighted, base=base,
+                    edge_cap=edge_cap)
+            else:
+                src_b, dst_b, w_b, counts = parse_blocks(
+                    jnp.asarray(bufs), ostart, oend,
+                    weighted=weighted, base=base, edge_cap=edge_cap)
+            acc_src, acc_dst, acc_w, total = _accumulate_batch(
+                acc_src, acc_dst, acc_w, total, src_b, dst_b, w_b, counts,
+                cap=cap)
+    return (acc_src, acc_dst, acc_w, total), cap
+
+
+def _device_num_vertices(src: jax.Array, dst: jax.Array) -> int:
+    """max id + 1 over the packed buffers (-1 padding never wins)."""
+    return int(jnp.maximum(jnp.max(src, initial=-1),
+                           jnp.max(dst, initial=-1))) + 1
+
+
+# ---------------------------------------------------------------------------
+# engines
+# ---------------------------------------------------------------------------
+
+class _StreamingEngine:
+    """Shared streaming pipeline; ``parse`` picks the block parser."""
+
+    def __init__(self, name: str, parse: str):
+        self.name = name
+        self._parse = parse
+
+    def stream(self, path: str, *, weighted: bool = False, base: int = 1,
+               offset: int = 0, beta: int = 256 * 1024, overlap: int = 64,
+               batch_blocks: int = 8) -> Tuple[DeviceEdges, int]:
+        return _stream_edges(path, weighted=weighted, base=base,
+                             offset=offset, beta=beta, overlap=overlap,
+                             batch_blocks=batch_blocks, parse=self._parse)
+
+    def read_edgelist(self, path: str, *, weighted: bool = False,
+                      base: int = 1, num_vertices: Optional[int] = None,
+                      offset: int = 0, **kw) -> EdgeList:
+        (src, dst, w, total), _ = self.stream(
+            path, weighted=weighted, base=base, offset=offset, **kw)
+        n = int(total)
+        src_h = np.asarray(src[:n])
+        dst_h = np.asarray(dst[:n])
+        w_h = np.asarray(w[:n]) if weighted else None
+        if num_vertices is None:
+            num_vertices = int(max(src_h.max(initial=-1),
+                                   dst_h.max(initial=-1))) + 1
+        return EdgeList(src_h, dst_h, w_h, np.int64(n), num_vertices)
+
+
+class _HostEngine:
+    """Adapter around the host parsers in :mod:`repro.core.edgelist`."""
+
+    def __init__(self, name: str, fn: Callable):
+        self.name = name
+        self._fn = fn
+
+    def read_edgelist(self, path: str, *, weighted: bool = False,
+                      base: int = 1, num_vertices: Optional[int] = None,
+                      offset: int = 0, **kw) -> EdgeList:
+        return self._fn(path, weighted=weighted, base=base,
+                        num_vertices=num_vertices, offset=offset, **kw)
+
+
+def _register_builtin_engines() -> None:
+    from . import edgelist
+    register_engine(_StreamingEngine("device", parse="xla"))
+    register_engine(_StreamingEngine("pallas", parse="pallas"))
+    register_engine(_HostEngine("numpy", edgelist.read_edgelist_numpy))
+    register_engine(_HostEngine("threads", edgelist.read_edgelist_threads))
+
+
+# ---------------------------------------------------------------------------
+# front door
+# ---------------------------------------------------------------------------
+
+def load_edgelist(
+    path: str,
+    *,
+    engine: str = "numpy",
+    weighted: bool = False,
+    symmetric: bool = False,
+    base: int = 1,
+    num_vertices: Optional[int] = None,
+    offset: int = 0,
+    **engine_kw,
+) -> EdgeList:
+    """File -> EdgeList through the named engine.
+
+    ``offset`` skips a header prefix (MTX bodies); ``engine_kw`` is
+    forwarded to the engine (beta/batch_blocks for device, num_workers
+    for threads, chunk_bytes for numpy, ...).
+    """
+    el = get_engine(engine).read_edgelist(
+        path, weighted=weighted, base=base, num_vertices=num_vertices,
+        offset=offset, **engine_kw)
+    if symmetric:
+        from .edgelist import symmetrize
+        el = symmetrize(el)
+    return el
+
+
+def load_csr(
+    path: str,
+    *,
+    engine: str = "device",
+    weighted: bool = False,
+    symmetric: bool = False,
+    base: int = 1,
+    num_vertices: Optional[int] = None,
+    method: str = "staged",
+    rho: int = 4,
+    offset: int = 0,
+    **engine_kw,
+) -> CSR:
+    """File -> CSR through the named engine.
+
+    Streaming engines (device, pallas) run fused: packed device edge
+    buffers feed ``csr_global``/``csr_staged`` directly — no host
+    EdgeList in between.  Host engines read an EdgeList and convert.
+    Symmetric graphs take the EdgeList route (reverse-edge expansion is
+    a host concatenation today).
+    """
+    eng = get_engine(engine)
+    if hasattr(eng, "stream") and not symmetric:
+        (src, dst, w, total), _cap = eng.stream(
+            path, weighted=weighted, base=base, offset=offset, **engine_kw)
+        n = int(total)
+        if num_vertices is None:
+            num_vertices = _device_num_vertices(src, dst) if n else 0
+        # Shrink the over-allocated buffers to the next power of two >= n
+        # before sorting: padding is all at the tail, so a prefix slice
+        # keeps every valid edge while bounding the sort size at 2n (and
+        # the pow-2 ladder bounds recompiles at log2(capacity) programs).
+        cap2 = 1 << max(n - 1, 1).bit_length()
+        if cap2 < src.shape[0]:
+            src, dst = src[:cap2], dst[:cap2]
+            w = w[:cap2] if weighted else None
+        if method == "global":
+            offsets, targets, ww = build.csr_global(
+                src, dst, w, num_vertices, weighted=weighted)
+        elif method == "staged":
+            offsets, targets, ww = build.csr_staged(
+                src, dst, w, num_vertices, rho=rho, weighted=weighted)
+        else:
+            raise ValueError(f"unknown method {method!r}")
+        return CSR(np.asarray(offsets).astype(np.int64),
+                   np.asarray(targets[:n]),
+                   np.asarray(ww[:n]) if weighted else None,
+                   num_vertices)
+    from .csr import convert_to_csr
+    el = load_edgelist(path, engine=engine, weighted=weighted,
+                       symmetric=symmetric, base=base,
+                       num_vertices=num_vertices, offset=offset, **engine_kw)
+    return convert_to_csr(el, method=method, rho=rho,
+                          engine="numpy" if engine in ("numpy", "threads")
+                          else "jax")
+
+
+_register_builtin_engines()

@@ -96,7 +96,7 @@ def parse_block(
     # per-token quantities (scatter at token starts / ends)
     next_tok = jnp.concatenate([is_tok[1:], jnp.zeros((1,), bool)])
     tok_end = is_tok & ~next_tok
-    tok_line = _scatter_set(line_cap if False else tok_cap, tok_start, tok_ord,
+    tok_line = _scatter_set(tok_cap, tok_start, tok_ord,
                             line_of, line_cap, I32)      # line of each token
     cum_dig = jnp.cumsum(is_digit.astype(I32))           # inclusive global
     dig_before_tok = _scatter_set(tok_cap, tok_start, tok_ord,

@@ -4,6 +4,10 @@ The host-side analogue of GVEL's madvise read-ahead: while the device
 runs step n, a background thread builds (and device_puts) batch n+1, so
 input never serializes with compute.  Step-indexed sources keep restart
 deterministic.
+
+``graph_walk_source`` is the bridge from the unified loader
+(:mod:`repro.core.loader`) into this pipeline: graph file -> CSR through
+a named engine -> step-indexed walk-batch source for :class:`Prefetcher`.
 """
 from __future__ import annotations
 
@@ -12,6 +16,27 @@ import threading
 from typing import Callable, Optional
 
 import jax
+
+
+def graph_walk_source(path: str, cfg, batch: int, seq: int, *,
+                      engine: str = "device",
+                      **load_kw) -> Callable[[int], dict]:
+    """Load a graph through ``loader.load_csr(engine=...)`` and return a
+    deterministic step-indexed source of random-walk LM batches.
+
+    The returned callable feeds :class:`Prefetcher` directly, completing
+    the streamed path: file -> packed device edges -> CSR -> walk batches,
+    with the loader and the batch pipeline double-buffering at both ends.
+    """
+    from ..core.loader import load_csr
+    from .walks import walk_batch
+
+    csr = load_csr(path, engine=engine, **load_kw)
+
+    def source(step: int) -> dict:
+        return walk_batch(csr, cfg, batch, seq, step)
+
+    return source
 
 
 class Prefetcher:

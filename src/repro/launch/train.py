@@ -58,12 +58,9 @@ def main(argv=None):
             print(f"resumed from step {start}")
 
     if args.graph:
-        from ..core import read_csr
-        from ..data.walks import walk_batch
-        csr = read_csr(args.graph, engine="numpy")
-        print(f"GVEL loaded graph: |V|={csr.num_vertices} "
-              f"|E|={int(csr.offsets[-1])}")
-        source = functools.partial(walk_batch, csr, cfg, args.batch, args.seq)
+        from ..data.pipeline import graph_walk_source
+        source = graph_walk_source(args.graph, cfg, args.batch, args.seq,
+                                   engine="numpy")
     else:
         source = functools.partial(synthetic_batch, cfg, args.batch, args.seq)
 

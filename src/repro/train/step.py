@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..core import compat
 from ..distributed.compression import compress_with_feedback, quantize_int8
 from ..models.transformer import loss_fn
 from .optimizer import OptimizerConfig, adamw_update, clip_by_global_norm
@@ -208,12 +209,11 @@ def make_local_accum_train_step(cfg, oc: OptimizerConfig, mesh, *,
     bspec = P(manual if len(manual) > 1 else manual[0])
 
     def train_step(state: TrainState, batch):
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             body, mesh=mesh,
             in_specs=(pspec, mspec, mspec, pspec,
                       jax.tree.map(lambda _: bspec, batch)),
             out_specs=(pspec, mspec, mspec, pspec, pspec, pspec),
-            check_vma=False,
             axis_names=set(manual))
         new_p, new_m, new_v, loss, gnorm, lr = fn(
             state.params, state.mu, state.nu, state.step, batch)

@@ -73,7 +73,8 @@ def test_elastic_reshard_across_device_counts(tmp_path, devices8):
     """Save on an 8-device mesh, restore on 4 (and back) — values equal."""
     code = f"""
 import numpy as np, jax
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.compat import make_mesh, device_mesh
 import sys
 from repro.checkpoint import io as ckpt_io
 from repro.configs import reduced_config
@@ -82,14 +83,13 @@ from repro.distributed import sharding as shd
 
 cfg = reduced_config("phi4-mini-3.8b")
 params = init_params(jax.random.key(2), cfg)
-mesh8 = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh8 = make_mesh((4, 2), ("data", "model"))
 sh8 = shd.param_shardings(jax.eval_shape(lambda: params), cfg, mesh8, fsdp=True)
 p8 = jax.device_put(params, sh8)
 ckpt_io.save(p8, r"{tmp_path}", 1)
 
 devs = np.array(jax.devices()[:4]).reshape(2, 2)
-mesh4 = jax.sharding.Mesh(devs, ("data", "model"),
-                          axis_types=(AxisType.Auto,)*2)
+mesh4 = device_mesh(devs, ("data", "model"))
 sh4 = shd.param_shardings(jax.eval_shape(lambda: params), cfg, mesh4, fsdp=True)
 p4, step = ckpt_io.restore(jax.eval_shape(lambda: params), r"{tmp_path}", 1,
                            shardings=sh4)

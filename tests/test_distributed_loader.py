@@ -6,13 +6,13 @@ import pytest
 def test_sharded_csr_matches_oracle(devices8, tmp_path):
     code = f"""
 import numpy as np, jax
-from jax.sharding import AxisType
+from repro.core.compat import make_mesh
 from repro.core import (make_graph_file, host_shard_and_load,
                         read_edgelist_numpy, convert_to_csr)
 
 path = r"{tmp_path}/g.el"
 v, e = make_graph_file(path, "rmat", scale=9, edge_factor=8, seed=5)
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 csr = host_shard_and_load(mesh, "data", path, num_vertices=v)
 off = np.asarray(csr.offsets); tgt = np.asarray(csr.targets)
 rows = off.shape[1] - 1
@@ -37,7 +37,7 @@ print("SHARDED-CSR-OK", tot)
 def test_weighted_sharded_csr(devices8, tmp_path):
     code = f"""
 import numpy as np, jax
-from jax.sharding import AxisType
+from repro.core.compat import make_mesh
 from repro.core.generate import write_edgelist
 from repro.core import host_shard_and_load
 rng = np.random.default_rng(1)
@@ -46,7 +46,7 @@ src = rng.integers(0, v, e); dst = rng.integers(0, v, e)
 w = (rng.random(e) * 10).round(3).astype(np.float32)
 path = r"{tmp_path}/w.el"
 write_edgelist(path, src, dst, w)
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 csr = host_shard_and_load(mesh, "data", path, num_vertices=v, weighted=True)
 off = np.asarray(csr.offsets); tgt = np.asarray(csr.targets)
 ww = np.asarray(csr.weights)
@@ -71,12 +71,12 @@ def test_param_shardings_cover_zoo(devices8):
     and a jitted forward lowers with them."""
     code = """
 import jax, numpy as np
-from jax.sharding import AxisType
+from repro.core.compat import make_mesh
 from repro.configs import ARCHS, reduced_config
 from repro.distributed import sharding as shd
 from repro.models import abstract_params
 
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 for name in ARCHS:
     cfg = reduced_config(name)
     ap = abstract_params(cfg, tp=2)
@@ -92,25 +92,26 @@ def test_compressed_allreduce_roundtrip(devices8):
     """Wire-efficient int8 all-reduce (all_to_all + all_gather) vs f32."""
     code = """
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+from repro.core.compat import make_mesh, shard_map
 from repro.distributed.compression import compressed_allreduce, compressed_psum
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 x = jnp.arange(8 * 33, dtype=jnp.float32).reshape(8, 33) / 7.0  # odd: pad path
 
 def body(xs):
     return compressed_allreduce(xs[0], "data", 8)[None]
 
-y = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("data"),
-                          out_specs=P("data"), check_vma=False))(x)
+y = jax.jit(shard_map(body, mesh=mesh, in_specs=P("data"),
+                      out_specs=P("data")))(x)
 ref = np.broadcast_to(np.asarray(x).sum(0, keepdims=True), (8, 33))
 err = np.abs(np.asarray(y) - ref).max() / np.abs(ref).max()
 assert err < 0.03, err       # two int8 quantizations
 
 def body2(xs):
     return compressed_psum(xs, "data")
-y2 = jax.jit(jax.shard_map(body2, mesh=mesh, in_specs=P("data"),
-                           out_specs=P("data"), check_vma=False))(x)
+y2 = jax.jit(shard_map(body2, mesh=mesh, in_specs=P("data"),
+                       out_specs=P("data")))(x)
 err2 = np.abs(np.asarray(y2) - ref).max() / np.abs(ref).max()
 assert err2 < 0.01, err2
 print("CPSUM-OK", float(err), float(err2))
@@ -122,7 +123,7 @@ def test_local_accum_step_parity(devices8):
     """shard_map local-grad accumulation == GSPMD reference step."""
     code = """
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.core.compat import make_mesh
 from repro.configs import reduced_config
 from repro.models import init_params
 from repro.train.optimizer import OptimizerConfig
@@ -131,7 +132,7 @@ from repro.train.step import make_train_step, make_local_accum_train_step
 
 cfg = reduced_config("phi4-mini-3.8b")
 oc = OptimizerConfig(lr=1e-3, warmup_steps=1, decay_steps=50)
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 params = init_params(jax.random.key(0), cfg)
 toks = jax.random.randint(jax.random.key(7), (8, 33), 0, cfg.vocab_size)
 batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
@@ -163,7 +164,7 @@ def test_zero1_local_step_parity(devices8):
     """ZeRO-sharded manual-DP step == GSPMD reference (params after 1 step)."""
     code = """
 import numpy as np, jax
-from jax.sharding import AxisType
+from repro.core.compat import make_mesh
 from repro.configs import reduced_config
 from repro.models import init_params
 from repro.train.optimizer import OptimizerConfig
@@ -173,7 +174,7 @@ from repro.train.step import (make_train_step, make_local_accum_train_step,
 
 cfg = reduced_config("phi4-mini-3.8b")
 oc = OptimizerConfig(lr=1e-3, warmup_steps=1, decay_steps=50)
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 params = init_params(jax.random.key(0), cfg)
 toks = jax.random.randint(jax.random.key(7), (8, 33), 0, cfg.vocab_size)
 batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

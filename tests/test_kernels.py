@@ -2,6 +2,8 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import (csr_offsets, degree_histogram, degree_histogram_ref,
