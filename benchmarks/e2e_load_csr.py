@@ -1,5 +1,5 @@
 """End-to-end ``load_csr``: streaming fused device engine vs the old
-batch round-trip pipeline, same input.
+batch round-trip pipeline vs binary snapshots, same input.
 
 The baseline below reproduces the pre-loader device path verbatim:
 synchronous block staging, jitted parse, a device->host copy of every
@@ -7,7 +7,15 @@ batch, ``np.concatenate``, a host EdgeList, and only then a device CSR
 build.  The streaming path (``loader.load_csr(engine="device")``)
 double-buffers staging behind the parse dispatch and accumulates every
 batch in a packed device buffer that feeds the CSR build directly.
+
+The snapshot rows measure GVEL's "write once, load many" story: the
+same graph converted once to a ``.gvel`` binary snapshot
+(``core.snapshot``), then loaded with zero parsing — either packed
+edgelist sections feeding the device CSR build (``snapshot_el``), or an
+embedded prebuilt CSR served straight from mmap (``snapshot_csr``).
 """
+import os
+
 import numpy as np
 
 from .common import dataset, emit, timeit
@@ -50,16 +58,39 @@ def _batch_roundtrip_csr(path, v, *, beta=256 * 1024, overlap=64,
     return convert_to_csr(el, method="staged", rho=4)
 
 
+def _snapshots(path, v):
+    """Convert the benchmark graph to .gvel once (cached beside it):
+    an edgelist-only snapshot and a CSR-embedded one."""
+    from repro.core import convert_to_csr, load_edgelist, save_snapshot
+
+    el_snap, csr_snap = path + ".el.gvel", path + ".csr.gvel"
+    if not (os.path.exists(el_snap) and os.path.exists(csr_snap)):
+        el = load_edgelist(path, engine="numpy", num_vertices=v)
+        save_snapshot(el_snap, edgelist=el)
+        save_snapshot(csr_snap, edgelist=el,
+                      csr=convert_to_csr(el, method="staged", rho=4))
+    return el_snap, csr_snap
+
+
 def run():
     from repro.core import load_csr
 
     path, v, e = dataset("web_rmat")
+    el_snap, csr_snap = _snapshots(path, v)
     t_old = timeit(lambda: _batch_roundtrip_csr(path, v), repeat=3)
     t_new = timeit(lambda: load_csr(path, engine="device", num_vertices=v,
                                     method="staged"), repeat=3)
+    t_sel = timeit(lambda: load_csr(el_snap, engine="snapshot",
+                                    num_vertices=v, method="staged"), repeat=3)
+    t_scsr = timeit(lambda: load_csr(csr_snap, engine="snapshot",
+                                     num_vertices=v), repeat=3)
     emit("e2e.load_csr_batch_roundtrip", t_old, f"edges_per_s={e / t_old:.3e}")
     emit("e2e.load_csr_streaming", t_new,
          f"edges_per_s={e / t_new:.3e};speedup={t_old / t_new:.2f}x")
+    emit("e2e.load_csr_snapshot_el", t_sel,
+         f"edges_per_s={e / t_sel:.3e};vs_streaming={t_new / t_sel:.2f}x")
+    emit("e2e.load_csr_snapshot_csr", t_scsr,
+         f"edges_per_s={e / t_scsr:.3e};vs_streaming={t_new / t_scsr:.2f}x")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Fail on broken relative links in markdown files.
+
+  python scripts/check_links.py README.md docs
+
+Arguments are markdown files or directories (scanned for ``*.md``).
+External links (http/https/mailto) and pure in-page anchors are
+skipped; everything else is resolved relative to the file that contains
+it and must exist.  Exit code 1 lists every broken link.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target) — target up to the first closing paren (no nested parens
+# in this repo's docs); also matches images ![alt](target).
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# ``code`` spans and fenced blocks may contain (...) that are not links
+_FENCE = re.compile(r"```.*?```", re.DOTALL)
+_INLINE_CODE = re.compile(r"`[^`]*`")
+
+
+def md_files(targets: list[str]) -> list[str]:
+    out = []
+    for t in targets:
+        if os.path.isdir(t):
+            for name in sorted(os.listdir(t)):
+                if name.endswith(".md"):
+                    out.append(os.path.join(t, name))
+        else:
+            out.append(t)
+    return out
+
+
+def check_file(path: str) -> list[str]:
+    text = open(path, encoding="utf-8").read()
+    text = _FENCE.sub("", text)
+    text = _INLINE_CODE.sub("", text)
+    broken = []
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]          # strip in-page anchor
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            broken.append(f"{path}: broken link '{target}' "
+                          f"(resolved to {resolved})")
+    return broken
+
+
+def main(argv: list[str]) -> int:
+    targets = argv or ["README.md", "docs"]
+    files = [f for f in md_files(targets) if os.path.exists(f)]
+    missing = [t for t in targets if not os.path.exists(t)]
+    broken = [msg for f in files for msg in check_file(f)]
+    broken += [f"link-check target does not exist: {t}" for t in missing]
+    if broken:
+        print("\n".join(broken), file=sys.stderr)
+        print(f"check_links: {len(broken)} broken link(s) in {len(files)} "
+              f"file(s)", file=sys.stderr)
+        return 1
+    print(f"check_links: {len(files)} file(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

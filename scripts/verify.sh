@@ -1,7 +1,41 @@
 #!/usr/bin/env bash
-# Tier-1 verify: the exact command from ROADMAP.md, run from any cwd.
-#   scripts/verify.sh            # full tier-1
+# Tier-1 verify: the exact command from ROADMAP.md, run from any cwd,
+# plus the docs link check and a convert.py snapshot round-trip smoke.
+#   scripts/verify.sh                 # full tier-1 + smoke
 #   scripts/verify.sh -m 'not slow'   # quick loop (skips the 1M-edge test)
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+python -m pytest -x -q "$@"
+
+# docs: every relative link in README.md / docs/*.md must resolve
+python scripts/check_links.py README.md docs
+
+# snapshot smoke: tiny text fixture -> scripts/convert.py -> load_csr
+# must match the csr_np host oracle
+python - <<'PY'
+import os, subprocess, sys, tempfile
+import numpy as np
+from repro.core import load_csr, make_graph_file, read_edgelist_numpy
+from repro.core.build import csr_np
+
+tmp = tempfile.mkdtemp(prefix="gvel_smoke_")
+el_path = os.path.join(tmp, "tiny.el")
+v, e = make_graph_file(el_path, "uniform", scale=8, edge_factor=4, seed=3)
+gv = os.path.join(tmp, "tiny.gvel")
+subprocess.run([sys.executable, "scripts/convert.py", el_path, gv,
+                "--num-vertices", str(v)], check=True)
+got = load_csr(gv, engine="snapshot")
+el = read_edgelist_numpy(el_path, num_vertices=v)
+n = int(el.num_edges)
+ref = csr_np(np.asarray(el.src[:n]), np.asarray(el.dst[:n]), None, v)
+assert np.array_equal(np.asarray(got.offsets, np.int64), ref.offsets)
+off = ref.offsets
+for u in range(v):
+    assert np.array_equal(np.sort(np.asarray(got.targets[off[u]:off[u+1]])),
+                          np.sort(ref.targets[off[u]:off[u+1]])), u
+print("snapshot smoke: convert.py round-trip OK")
+PY
+
+echo "verify: all green"

@@ -9,10 +9,27 @@ the branch-free replacement for GVEL's newline repositioning.
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import numpy as np
 
 NEWLINE = 10
+
+
+def mmap_bytes(path: str, offset: int = 0) -> np.ndarray:
+    """Memory-map a file as uint8, optionally skipping a header prefix.
+
+    GVEL maps the file and advises WILLNEED; np.memmap is the same
+    mmap(2) under the hood, and the staging loops touch pages
+    sequentially, which triggers kernel readahead (the madvise effect).
+    Shared by the text staging pipeline, the host parsers, and the
+    binary snapshot reader.
+    """
+    size = os.path.getsize(path)
+    if size <= offset:
+        return np.zeros(0, np.uint8)
+    data = np.memmap(path, dtype=np.uint8, mode="r")
+    return data[offset:] if offset else data
 
 
 @dataclasses.dataclass(frozen=True)

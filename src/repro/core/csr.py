@@ -63,7 +63,9 @@ def read_csr(
     """File -> CSR through the unified loader (back-compat wrapper).
 
     ``engine="jax"`` maps to the streaming ``device`` engine, whose
-    parse -> CSR path is fused on device; see loader.load_csr.
+    parse -> CSR path is fused on device; see loader.load_csr.  Binary
+    ``.gvel`` snapshots are detected by magic in the front door and
+    served zero-parse (an embedded CSR skips the build entirely).
     """
     from .loader import load_csr
     return load_csr(path, engine="device" if engine == "jax" else engine,

@@ -18,24 +18,13 @@ parser implementations plus back-compat wrappers:
 """
 from __future__ import annotations
 
-import os
 from typing import Optional
 
 import numpy as np
 
 from . import parse_np
+from .blocks import mmap_bytes as _mmap_bytes   # staging mmap lives in blocks
 from .types import EdgeList
-
-
-def _mmap_bytes(path: str, offset: int = 0) -> np.ndarray:
-    size = os.path.getsize(path)
-    if size <= offset:
-        return np.zeros(0, np.uint8)
-    # GVEL maps the file and advises WILLNEED; np.memmap is the same mmap(2)
-    # under the hood and the staging loop below touches pages sequentially,
-    # which triggers kernel readahead (the madvise effect).
-    data = np.memmap(path, dtype=np.uint8, mode="r")
-    return data[offset:] if offset else data
 
 
 def symmetrize(el: EdgeList) -> EdgeList:

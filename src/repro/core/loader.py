@@ -13,6 +13,8 @@ memory — ``load_edgelist`` (file -> EdgeList) and ``load_csr``
                 ``kernels.parse_edges`` Pallas kernel
     numpy       single-pass vectorized numpy parser (host)
     threads     thread pool over newline-aligned chunks (host)
+    snapshot    zero-parse mmap of a binary ``.gvel`` snapshot
+                (``core.snapshot``; write once, load many)
     ==========  ================================================
 
 The device/pallas engines are *streaming* (GVEL's pipelined read):
@@ -46,8 +48,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import build
-from .blocks import NEWLINE, owned_range, plan_blocks, stage_blocks
-from .edgelist import _mmap_bytes
+from .blocks import NEWLINE, mmap_bytes as _mmap_bytes, owned_range, \
+    plan_blocks, stage_blocks
 from .parse import parse_blocks
 from .types import CSR, EdgeList
 
@@ -91,6 +93,12 @@ def get_engine(name: str) -> LoaderEngine:
 
 def available_engines() -> list[str]:
     return sorted(_REGISTRY)
+
+
+def csr_convert_engine(engine: str) -> str:
+    """Map a loader engine name to a ``convert_to_csr`` backend: host
+    parsers keep the numpy builder, everything else builds on device."""
+    return "numpy" if engine in ("numpy", "threads") else "jax"
 
 
 # ---------------------------------------------------------------------------
@@ -250,11 +258,27 @@ class _HostEngine:
 
 
 def _register_builtin_engines() -> None:
-    from . import edgelist
+    from . import edgelist, snapshot
     register_engine(_StreamingEngine("device", parse="xla"))
     register_engine(_StreamingEngine("pallas", parse="pallas"))
     register_engine(_HostEngine("numpy", edgelist.read_edgelist_numpy))
     register_engine(_HostEngine("threads", edgelist.read_edgelist_threads))
+    register_engine(snapshot.SnapshotEngine())
+
+
+def _resolve_engine(path: str, engine: str, offset: int) -> str:
+    """Route ``.gvel`` files (by magic sniff, not extension) to the
+    snapshot engine: a text parser pointed at a binary snapshot would
+    silently decode garbage.  ``offset != 0`` means the caller is
+    reading a body embedded in another format (MTX), never a snapshot;
+    unreadable/missing paths fall through so non-file engines keep
+    working.
+    """
+    if engine != "snapshot" and offset == 0:
+        from .snapshot import is_snapshot
+        if is_snapshot(path):
+            return "snapshot"
+    return engine
 
 
 # ---------------------------------------------------------------------------
@@ -276,8 +300,10 @@ def load_edgelist(
 
     ``offset`` skips a header prefix (MTX bodies); ``engine_kw`` is
     forwarded to the engine (beta/batch_blocks for device, num_workers
-    for threads, chunk_bytes for numpy, ...).
+    for threads, chunk_bytes for numpy, ...).  Binary ``.gvel`` files
+    are detected by magic and routed to the snapshot engine.
     """
+    engine = _resolve_engine(path, engine, offset)
     el = get_engine(engine).read_edgelist(
         path, weighted=weighted, base=base, num_vertices=num_vertices,
         offset=offset, **engine_kw)
@@ -307,9 +333,24 @@ def load_csr(
     EdgeList in between.  Host engines read an EdgeList and convert.
     Symmetric graphs take the EdgeList route (reverse-edge expansion is
     a host concatenation today).
+
+    Binary ``.gvel`` files are detected by magic and routed to the
+    snapshot engine.  Engines exposing ``read_csr_prebuilt`` (snapshot)
+    are probed first: a snapshot with an embedded CSR is served straight
+    from mmap'd views — no parse *and* no build (``method``/``rho`` do
+    not apply; the stored CSR wins).
     """
+    engine = _resolve_engine(path, engine, offset)
     eng = get_engine(engine)
+    if hasattr(eng, "read_csr_prebuilt") and not symmetric:
+        csr = eng.read_csr_prebuilt(path, weighted=weighted,
+                                    num_vertices=num_vertices, offset=offset,
+                                    **engine_kw)
+        if csr is not None:
+            return csr
     if hasattr(eng, "stream") and not symmetric:
+        if num_vertices is None and hasattr(eng, "num_vertices_hint"):
+            num_vertices = eng.num_vertices_hint(path)
         (src, dst, w, total), _cap = eng.stream(
             path, weighted=weighted, base=base, offset=offset, **engine_kw)
         n = int(total)
@@ -340,8 +381,7 @@ def load_csr(
                        symmetric=symmetric, base=base,
                        num_vertices=num_vertices, offset=offset, **engine_kw)
     return convert_to_csr(el, method=method, rho=rho,
-                          engine="numpy" if engine in ("numpy", "threads")
-                          else "jax")
+                          engine=csr_convert_engine(engine))
 
 
 _register_builtin_engines()

@@ -102,6 +102,31 @@ def read_mtx_csr(path: str, *, method: str = "staged", rho: int = 4,
                           rho=rho, engine=engine)
 
 
+def mtx_to_snapshot(path: str, out_path: str, *, engine: str = "numpy",
+                    csr: bool = True, method: str = "staged",
+                    rho: int = 4) -> GraphMeta:
+    """Convert an MTX file to a binary ``.gvel`` snapshot (parse once).
+
+    Header attributes are honored during the conversion — a symmetric
+    MTX is materialized with its reverse edges, a pattern field stays
+    unweighted — so the snapshot is the *resolved* graph and reloads
+    with no MTX-specific handling at all.  With ``csr=True`` (default)
+    a prebuilt CSR is embedded, making ``load_csr(out_path)`` a pure
+    mmap.  Returns the source header's :class:`GraphMeta`.
+    """
+    from .loader import csr_convert_engine
+    from .snapshot import save_snapshot
+
+    hdr = read_header(path)
+    el = read_mtx(path, engine=engine)
+    csr_obj = None
+    if csr:
+        csr_obj = convert_to_csr(el, method=method, rho=rho,
+                                 engine=csr_convert_engine(engine))
+    save_snapshot(out_path, edgelist=el, csr=csr_obj)
+    return hdr.meta
+
+
 def write_mtx(path: str, src, dst, weights=None, *, num_vertices: int,
               symmetric: bool = False) -> None:
     field = "pattern" if weights is None else "real"

@@ -1,0 +1,436 @@
+"""Binary graph snapshots: the ``.gvel`` container (write once, load many).
+
+GVEL's CSR speedups come from paying the text-parse cost exactly once;
+every load after that should be a zero-parse mmap.  This module defines
+a versioned little-endian container holding the packed edgelist buffers
+(``src``/``dst``/optional ``w``) and, optionally, a prebuilt CSR
+(``offsets``/``indices``/optional ``weights``) so ``load_csr`` can skip
+even the rank-based build — the true "write once, load many" fast path.
+
+Layout (all integers little-endian; byte-level spec in
+``docs/snapshot-format.md``)::
+
+    [ header  | section table | pad | section 0 | pad | section 1 | ... ]
+
+    header (40 bytes):
+        magic     8s   b"GVELSNAP"
+        version   u32  1
+        flags     u32  bit 0 WEIGHTED, bit 1 HAS_EDGELIST, bit 2 HAS_CSR
+        num_vertices  u64
+        num_edges     u64
+        section_count u32
+        reserved      u32  (must be 0)
+    section table entry (24 bytes each):
+        section_id u32, dtype_code u32, offset u64, nbytes u64
+
+Every section starts on a 4096-byte (page) boundary so an mmap'd reader
+hands out aligned, typed, read-only views with no copying and no
+parsing.  Vertex ids in a snapshot are canonical **0-based** regardless
+of the base of the text file it was converted from.
+
+Readers must reject unknown versions and truncated files, and must
+*ignore* unknown section ids (that is how the format grows without a
+version bump — see the spec for the bump rules).
+
+The :class:`SnapshotEngine` registered under ``"snapshot"`` plugs this
+into the loader registry: ``read_edgelist`` returns mmap-backed views,
+``stream`` feeds the fused ``load_csr`` device path, and
+``read_csr_prebuilt`` serves an embedded CSR with no build at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import struct
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .blocks import mmap_bytes
+from .types import CSR, EdgeList
+
+MAGIC = b"GVELSNAP"
+VERSION = 1
+HEADER_FMT = "<8sIIQQII"           # magic, version, flags, V, E, n_sections, reserved
+HEADER_LEN = struct.calcsize(HEADER_FMT)       # 40
+SECTION_FMT = "<IIQQ"              # id, dtype code, byte offset, byte length
+SECTION_LEN = struct.calcsize(SECTION_FMT)     # 24
+ALIGN = 4096                       # sections are page-aligned
+
+FLAG_WEIGHTED = 1 << 0
+FLAG_EDGELIST = 1 << 1
+FLAG_CSR = 1 << 2
+
+SEC_SRC = 1
+SEC_DST = 2
+SEC_EDGE_WEIGHTS = 3
+SEC_CSR_OFFSETS = 4
+SEC_CSR_INDICES = 5
+SEC_CSR_WEIGHTS = 6
+
+# dtype codes are explicit little-endian; a snapshot means the same bytes
+# on every host (big-endian writers must byteswap before writing).
+_CODE_TO_DTYPE = {
+    1: np.dtype("<i4"),
+    2: np.dtype("<i8"),
+    3: np.dtype("<f4"),
+    4: np.dtype("<f8"),
+    5: np.dtype("u1"),
+}
+_KIND_TO_CODE = {("i", 4): 1, ("i", 8): 2, ("f", 4): 3, ("f", 8): 4,
+                 ("u", 1): 5}
+
+
+class SnapshotError(ValueError):
+    """Malformed, truncated, or unsupported ``.gvel`` file."""
+
+
+def _dtype_code(dtype: np.dtype) -> int:
+    try:
+        return _KIND_TO_CODE[(dtype.kind, dtype.itemsize)]
+    except KeyError:
+        raise SnapshotError(f"unsupported section dtype {dtype}") from None
+
+
+def _align(off: int) -> int:
+    return -(-off // ALIGN) * ALIGN
+
+
+def is_snapshot(path: str) -> bool:
+    """Cheap magic sniff; False for missing/short/non-snapshot files."""
+    try:
+        with open(path, "rb") as f:
+            return f.read(len(MAGIC)) == MAGIC
+    except OSError:
+        return False
+
+
+def peek_header(path: str) -> Tuple[int, int, int, int, int]:
+    """Validate and return (version, flags, V, E, section_count) without
+    touching any section bytes — used for cheap num_vertices hints."""
+    size = os.path.getsize(path)
+    if size < HEADER_LEN:
+        raise SnapshotError(f"{path}: truncated header ({size} bytes)")
+    with open(path, "rb") as f:
+        hdr = f.read(HEADER_LEN)
+    magic, version, flags, v, e, count, reserved = struct.unpack(HEADER_FMT, hdr)
+    if magic != MAGIC:
+        raise SnapshotError(f"{path}: bad magic {magic!r}, not a .gvel snapshot")
+    if version != VERSION:
+        raise SnapshotError(
+            f"{path}: unsupported snapshot version {version} "
+            f"(this reader supports {VERSION})")
+    if reserved != 0:
+        raise SnapshotError(f"{path}: nonzero reserved header field")
+    return version, flags, v, e, count
+
+
+# ---------------------------------------------------------------------------
+# writer
+# ---------------------------------------------------------------------------
+
+def save_snapshot(
+    path: str,
+    *,
+    edgelist: Optional[EdgeList] = None,
+    csr: Optional[CSR] = None,
+) -> None:
+    """Write a ``.gvel`` snapshot from loader outputs.
+
+    At least one of ``edgelist`` / ``csr`` is required; pass both to get
+    a file that serves *every* ``load_*`` entry point (``load_csr``
+    prefers the embedded CSR and skips the build entirely).  Vertex ids
+    are stored as-is — loader outputs are already 0-based.  A CSR must
+    be global (``row_start == 0``); shard-local CSRs have no file-level
+    meaning.
+    """
+    if edgelist is None and csr is None:
+        raise ValueError("save_snapshot needs an edgelist, a csr, or both")
+
+    sections: List[Tuple[int, np.ndarray]] = []
+    flags = 0
+    num_vertices = None
+    num_edges = None
+
+    if edgelist is not None:
+        n = int(edgelist.num_edges)
+        src = np.ascontiguousarray(np.asarray(edgelist.src[:n], dtype="<i4"))
+        dst = np.ascontiguousarray(np.asarray(edgelist.dst[:n], dtype="<i4"))
+        sections += [(SEC_SRC, src), (SEC_DST, dst)]
+        if edgelist.weights is not None:
+            w = np.ascontiguousarray(np.asarray(edgelist.weights[:n],
+                                                dtype="<f4"))
+            sections.append((SEC_EDGE_WEIGHTS, w))
+            flags |= FLAG_WEIGHTED
+        flags |= FLAG_EDGELIST
+        num_vertices = int(edgelist.num_vertices)
+        num_edges = n
+
+    if csr is not None:
+        if csr.row_start != 0:
+            raise ValueError("save_snapshot: shard-local CSR (row_start != 0) "
+                             "cannot be snapshotted")
+        offsets = np.ascontiguousarray(np.asarray(csr.offsets, dtype="<i8"))
+        indices = np.ascontiguousarray(np.asarray(csr.targets, dtype="<i4"))
+        if offsets.shape[0] != csr.num_vertices + 1:
+            raise ValueError(
+                f"save_snapshot: offsets length {offsets.shape[0]} != "
+                f"num_vertices + 1 ({csr.num_vertices + 1})")
+        if num_vertices is not None and num_vertices != csr.num_vertices:
+            raise ValueError(
+                f"save_snapshot: edgelist has {num_vertices} vertices, "
+                f"csr has {csr.num_vertices}")
+        if num_edges is not None and num_edges != indices.shape[0]:
+            raise ValueError(
+                f"save_snapshot: edgelist has {num_edges} edges, "
+                f"csr has {indices.shape[0]} — snapshot one graph")
+        csr_weighted = csr.weights is not None
+        if edgelist is not None and csr_weighted != (edgelist.weights is not None):
+            raise ValueError("save_snapshot: edgelist/csr weight presence "
+                             "mismatch")
+        sections += [(SEC_CSR_OFFSETS, offsets), (SEC_CSR_INDICES, indices)]
+        if csr_weighted:
+            cw = np.ascontiguousarray(np.asarray(csr.weights, dtype="<f4"))
+            sections.append((SEC_CSR_WEIGHTS, cw))
+            flags |= FLAG_WEIGHTED
+        flags |= FLAG_CSR
+        num_vertices = csr.num_vertices
+        if num_edges is None:
+            num_edges = int(indices.shape[0])
+
+    # layout: header, table, then page-aligned sections in table order
+    table = []
+    off = HEADER_LEN + len(sections) * SECTION_LEN
+    for sid, arr in sections:
+        off = _align(off)
+        table.append((sid, _dtype_code(arr.dtype), off, arr.nbytes))
+        off += arr.nbytes
+    end = off
+
+    with open(path, "wb") as f:
+        f.write(struct.pack(HEADER_FMT, MAGIC, VERSION, flags,
+                            num_vertices, num_edges, len(sections), 0))
+        for entry in table:
+            f.write(struct.pack(SECTION_FMT, *entry))
+        for (sid, arr), (_, _, soff, _) in zip(sections, table):
+            f.seek(soff)
+            f.write(arr.tobytes())
+        # zero-length tail sections may point past the last written byte;
+        # extend so every (offset, offset + nbytes) range is in-file
+        f.truncate(end)
+
+
+# ---------------------------------------------------------------------------
+# reader
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """A validated, mmap-backed view of a ``.gvel`` file.
+
+    Array fields are read-only numpy views straight into the page cache
+    — no bytes are copied or parsed at load time.
+    """
+
+    path: str
+    version: int
+    flags: int
+    num_vertices: int
+    num_edges: int
+    src: Optional[np.ndarray]
+    dst: Optional[np.ndarray]
+    edge_weights: Optional[np.ndarray]
+    csr_offsets: Optional[np.ndarray]
+    csr_indices: Optional[np.ndarray]
+    csr_weights: Optional[np.ndarray]
+
+    @property
+    def weighted(self) -> bool:
+        return bool(self.flags & FLAG_WEIGHTED)
+
+    @property
+    def has_edgelist(self) -> bool:
+        return bool(self.flags & FLAG_EDGELIST)
+
+    @property
+    def has_csr(self) -> bool:
+        return bool(self.flags & FLAG_CSR)
+
+    def edgelist(self) -> EdgeList:
+        if not self.has_edgelist:
+            raise SnapshotError(f"{self.path}: CSR-only snapshot has no "
+                                f"edgelist sections")
+        return EdgeList(self.src, self.dst, self.edge_weights,
+                        np.int64(self.num_edges), self.num_vertices)
+
+    def csr(self) -> CSR:
+        if not self.has_csr:
+            raise SnapshotError(f"{self.path}: snapshot has no CSR sections")
+        return CSR(self.csr_offsets, self.csr_indices, self.csr_weights,
+                   self.num_vertices)
+
+
+def read_snapshot(path: str) -> Snapshot:
+    """mmap + validate a ``.gvel`` file; returns typed zero-copy views."""
+    version, flags, num_vertices, num_edges, count = peek_header(path)
+    size = os.path.getsize(path)
+    table_end = HEADER_LEN + count * SECTION_LEN
+    if size < table_end:
+        raise SnapshotError(
+            f"{path}: truncated section table ({size} < {table_end} bytes)")
+    data = mmap_bytes(path)
+    raw = data[HEADER_LEN:table_end].tobytes()
+
+    views = {}
+    for i in range(count):
+        sid, code, off, nbytes = struct.unpack_from(SECTION_FMT, raw,
+                                                    i * SECTION_LEN)
+        if sid not in (SEC_SRC, SEC_DST, SEC_EDGE_WEIGHTS, SEC_CSR_OFFSETS,
+                       SEC_CSR_INDICES, SEC_CSR_WEIGHTS):
+            continue                    # forward compat: skip unknown sections
+        if code not in _CODE_TO_DTYPE:
+            raise SnapshotError(f"{path}: section {sid} has unknown dtype "
+                                f"code {code}")
+        dtype = _CODE_TO_DTYPE[code]
+        if off % ALIGN:
+            raise SnapshotError(f"{path}: section {sid} offset {off} is not "
+                                f"{ALIGN}-byte aligned")
+        if off + nbytes > size:
+            raise SnapshotError(
+                f"{path}: truncated — section {sid} spans "
+                f"[{off}, {off + nbytes}) but file is {size} bytes")
+        if nbytes % dtype.itemsize:
+            raise SnapshotError(f"{path}: section {sid} length {nbytes} is "
+                                f"not a multiple of {dtype.itemsize}")
+        views[sid] = data[off:off + nbytes].view(dtype)
+
+    def expect(sid: int, name: str, length: int) -> np.ndarray:
+        arr = views.get(sid)
+        if arr is None:
+            raise SnapshotError(f"{path}: flagged {name} section missing")
+        if arr.shape[0] != length:
+            raise SnapshotError(f"{path}: {name} has {arr.shape[0]} elements, "
+                                f"header implies {length}")
+        return arr
+
+    src = dst = ew = co = ci = cw = None
+    if flags & FLAG_EDGELIST:
+        src = expect(SEC_SRC, "src", num_edges)
+        dst = expect(SEC_DST, "dst", num_edges)
+        if flags & FLAG_WEIGHTED:
+            ew = expect(SEC_EDGE_WEIGHTS, "edge-weights", num_edges)
+    if flags & FLAG_CSR:
+        co = expect(SEC_CSR_OFFSETS, "csr-offsets", num_vertices + 1)
+        ci = expect(SEC_CSR_INDICES, "csr-indices", num_edges)
+        if int(co[-1]) != num_edges:
+            raise SnapshotError(f"{path}: csr offsets end at {int(co[-1])}, "
+                                f"header says {num_edges} edges")
+        if flags & FLAG_WEIGHTED:
+            cw = expect(SEC_CSR_WEIGHTS, "csr-weights", num_edges)
+    return Snapshot(path, version, flags, num_vertices, num_edges,
+                    src, dst, ew, co, ci, cw)
+
+
+# ---------------------------------------------------------------------------
+# loader engine
+# ---------------------------------------------------------------------------
+
+class SnapshotEngine:
+    """Zero-parse loader engine over ``.gvel`` snapshots.
+
+    ``base`` is accepted for interface parity and ignored — snapshot ids
+    are canonical 0-based.  ``offset`` must be 0 (snapshots are never a
+    body embedded in another file).
+    """
+
+    name = "snapshot"
+
+    def __init__(self):
+        self._memo: Optional[Tuple[tuple, Snapshot]] = None
+
+    def _snap(self, path: str) -> Snapshot:
+        """One open + validation per file per ``load_csr`` call: the
+        front door probes ``read_csr_prebuilt`` / ``num_vertices_hint``
+        / ``stream`` in sequence, so memoize on (path, mtime, size).
+        A stale entry only costs a re-read; views are zero-copy, so the
+        memo pins one mmap, not file contents.  The (key, value) pair is
+        written as one tuple so concurrent loads of different files race
+        only on which entry survives, never on a mixed key/value.
+        """
+        st = os.stat(path)
+        key = (path, st.st_mtime_ns, st.st_size)
+        memo = self._memo
+        if memo is not None and memo[0] == key:
+            return memo[1]
+        snap = read_snapshot(path)
+        self._memo = (key, snap)
+        return snap
+
+    @staticmethod
+    def _check(snap: Snapshot, *, weighted: bool, offset: int) -> None:
+        if offset:
+            raise ValueError("snapshot engine does not support offset reads")
+        if weighted and not snap.weighted:
+            raise SnapshotError(
+                f"{snap.path}: weighted load requested but snapshot is "
+                f"unweighted")
+
+    def read_edgelist(self, path: str, *, weighted: bool = False,
+                      base: int = 0, num_vertices: Optional[int] = None,
+                      offset: int = 0, **kw) -> EdgeList:
+        snap = self._snap(path)
+        self._check(snap, weighted=weighted, offset=offset)
+        el = snap.edgelist()
+        w = el.weights if weighted else None
+        v = el.num_vertices if num_vertices is None else num_vertices
+        return EdgeList(el.src, el.dst, w, el.num_edges, v)
+
+    def num_vertices_hint(self, path: str) -> int:
+        """Header-only |V| — lets the fused ``load_csr`` keep isolated
+        trailing vertices a max-id scan over the edges would drop."""
+        return self._snap(path).num_vertices
+
+    def stream(self, path: str, *, weighted: bool = False, base: int = 0,
+               offset: int = 0, **kw):
+        """mmap -> packed device buffers for the fused ``load_csr`` path.
+
+        The buffers are exact-length (no -1 tail padding), which the
+        rank-based builders accept: padding handling is a no-op when
+        there is none.
+        """
+        import jax.numpy as jnp
+
+        snap = self._snap(path)
+        self._check(snap, weighted=weighted, offset=offset)
+        if snap.num_edges > np.iinfo(np.int32).max:
+            # Same int32 regime as the text streaming engine's capacity
+            # guard: the fused path's running total is a device int32.
+            raise ValueError(
+                f"{path}: {snap.num_edges} edges exceeds int32 for the fused "
+                f"load_csr path; embed a prebuilt CSR in the snapshot "
+                f"(scripts/convert.py default) or use load_edgelist")
+        el = snap.edgelist()
+        src = jnp.asarray(el.src)
+        dst = jnp.asarray(el.dst)
+        w = jnp.asarray(el.weights) if weighted else None
+        total = jnp.asarray(snap.num_edges, jnp.int32)
+        return (src, dst, w, total), snap.num_edges
+
+    def read_csr_prebuilt(self, path: str, *, weighted: bool = False,
+                          num_vertices: Optional[int] = None, offset: int = 0,
+                          **kw) -> Optional[CSR]:
+        """Embedded-CSR fast path: mmap views, no parse, no build.
+
+        Returns None (caller falls back to the stream + build path) when
+        the snapshot has no CSR sections or the caller pinned a
+        different ``num_vertices`` than the stored CSR was built for.
+        """
+        snap = self._snap(path)
+        self._check(snap, weighted=weighted, offset=offset)
+        if not snap.has_csr:
+            return None
+        if num_vertices is not None and num_vertices != snap.num_vertices:
+            return None
+        csr = snap.csr()
+        return CSR(csr.offsets, csr.targets,
+                   csr.weights if weighted else None, csr.num_vertices)

@@ -1,0 +1,225 @@
+"""Binary ``.gvel`` snapshots: round-trip parity vs the ``csr_np`` host
+oracle, malformed-file rejection, and loader-registry integration."""
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core import (available_engines, load_csr, load_edgelist,
+                        read_snapshot, save_snapshot)
+from repro.core.build import csr_np
+from repro.core.csr import convert_to_csr
+from repro.core.generate import write_edgelist
+from repro.core.snapshot import (HEADER_FMT, MAGIC, SnapshotError, VERSION,
+                                 is_snapshot)
+
+
+def _graph(tmp_path, *, weighted, base, seed=0, v=60, e=400):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, v, e)
+    dst = rng.integers(0, v, e)
+    w = (rng.random(e) * 9).round(3).astype(np.float32) if weighted else None
+    path = str(tmp_path / f"g_{weighted}_{base}.el")
+    write_edgelist(path, src, dst, w, base=base)
+    oracle = csr_np(src.astype(np.int32), dst.astype(np.int32), w, v)
+    return path, v, e, oracle
+
+
+def _snapshot(tmp_path, text_path, *, weighted, base, v, with_csr=True):
+    """text -> (EdgeList, host CSR) -> .gvel, the convert.py pipeline."""
+    el = load_edgelist(text_path, engine="numpy", weighted=weighted,
+                       base=base, num_vertices=v)
+    csr = convert_to_csr(el, engine="numpy") if with_csr else None
+    gv = str(tmp_path / (os.path.basename(text_path) + ".gvel"))
+    save_snapshot(gv, edgelist=el, csr=csr)
+    return gv, el
+
+
+def _assert_rows_match(csr, oracle, v, *, weighted):
+    assert np.array_equal(np.asarray(csr.offsets, np.int64),
+                          np.asarray(oracle.offsets))
+    off = np.asarray(oracle.offsets)
+    for u in range(v):
+        mine = np.sort(np.asarray(csr.targets[off[u]:off[u + 1]]))
+        ref = np.sort(np.asarray(oracle.targets[off[u]:off[u + 1]]))
+        assert np.array_equal(mine, ref), u
+    if weighted:
+        for u in range(v):
+            mine = sorted(zip(
+                np.asarray(csr.targets[off[u]:off[u + 1]]).tolist(),
+                np.round(np.asarray(csr.weights[off[u]:off[u + 1]]), 3).tolist()))
+            ref = sorted(zip(
+                np.asarray(oracle.targets[off[u]:off[u + 1]]).tolist(),
+                np.round(np.asarray(oracle.weights[off[u]:off[u + 1]]), 3).tolist()))
+            assert mine == ref, u
+
+
+# ---- registry ----------------------------------------------------------------
+
+def test_snapshot_engine_registered():
+    assert "snapshot" in available_engines()
+
+
+# ---- round trip --------------------------------------------------------------
+
+@pytest.mark.parametrize("weighted,base", [(False, 1), (False, 0),
+                                           (True, 1), (True, 0)])
+def test_roundtrip_prebuilt_csr_parity(tmp_path, weighted, base):
+    """text -> .gvel (CSR embedded) -> load_csr == csr_np oracle, exactly:
+    the stored CSR *is* the host-oracle build, served back via mmap."""
+    path, v, e, oracle = _graph(tmp_path, weighted=weighted, base=base,
+                                seed=base + 2 * weighted)
+    gv, _ = _snapshot(tmp_path, path, weighted=weighted, base=base, v=v)
+    csr = load_csr(gv, engine="snapshot", weighted=weighted)
+    assert np.array_equal(np.asarray(csr.offsets, np.int64),
+                          np.asarray(oracle.offsets))
+    assert np.array_equal(np.asarray(csr.targets), np.asarray(oracle.targets))
+    if weighted:
+        assert np.allclose(np.asarray(csr.weights), np.asarray(oracle.weights))
+    else:
+        assert csr.weights is None
+
+
+@pytest.mark.parametrize("weighted,base", [(False, 1), (True, 0)])
+def test_roundtrip_edgelist_only_builds_csr(tmp_path, weighted, base):
+    """Edgelist-only snapshot: load_csr falls back to the fused device
+    build over the mmap'd sections; rows match the oracle."""
+    path, v, e, oracle = _graph(tmp_path, weighted=weighted, base=base, seed=7)
+    gv, _ = _snapshot(tmp_path, path, weighted=weighted, base=base, v=v,
+                      with_csr=False)
+    csr = load_csr(gv, engine="snapshot", weighted=weighted)
+    _assert_rows_match(csr, oracle, v, weighted=weighted)
+
+
+def test_roundtrip_edgelist_views(tmp_path):
+    path, v, e, _ = _graph(tmp_path, weighted=True, base=1, seed=3)
+    gv, el = _snapshot(tmp_path, path, weighted=True, base=1, v=v)
+    el2 = load_edgelist(gv, engine="snapshot", weighted=True)
+    n = int(el2.num_edges)
+    assert n == e and el2.num_vertices == v
+    assert np.array_equal(np.asarray(el2.src[:n]), np.asarray(el.src))
+    assert np.array_equal(np.asarray(el2.dst[:n]), np.asarray(el.dst))
+    assert np.allclose(np.asarray(el2.weights[:n]), np.asarray(el.weights))
+
+
+def test_front_door_autodetects_gvel(tmp_path):
+    """load_csr/load_edgelist sniff the magic: a .gvel passed with the
+    default (text) engine routes to the snapshot engine."""
+    path, v, e, oracle = _graph(tmp_path, weighted=False, base=1, seed=9)
+    gv, _ = _snapshot(tmp_path, path, weighted=False, base=1, v=v)
+    csr = load_csr(gv)                        # default engine="device"
+    assert np.array_equal(np.asarray(csr.offsets, np.int64),
+                          np.asarray(oracle.offsets))
+    el = load_edgelist(gv)                    # default engine="numpy"
+    assert int(el.num_edges) == e
+
+
+def test_isolated_trailing_vertices_preserved(tmp_path):
+    """|V| comes from the header, not a max-id scan: vertices past the
+    last referenced id survive the round trip."""
+    path = str(tmp_path / "iso.el")
+    write_edgelist(path, [0, 1], [1, 0], base=1)
+    el = load_edgelist(path, engine="numpy", num_vertices=10)
+    gv = str(tmp_path / "iso.gvel")
+    save_snapshot(gv, edgelist=el)
+    csr = load_csr(gv, engine="snapshot")
+    assert csr.num_vertices == 10 and csr.num_rows == 10
+
+
+def test_empty_graph_roundtrip(tmp_path):
+    empty = str(tmp_path / "empty.el")
+    open(empty, "w").close()
+    el = load_edgelist(empty, engine="numpy")
+    gv = str(tmp_path / "empty.gvel")
+    save_snapshot(gv, edgelist=el, csr=convert_to_csr(el, engine="numpy"))
+    csr = load_csr(gv, engine="snapshot")
+    assert csr.num_rows == 0
+    assert np.asarray(csr.offsets).tolist() == [0]
+
+
+def test_csr_only_snapshot(tmp_path):
+    path, v, e, oracle = _graph(tmp_path, weighted=False, base=1, seed=5)
+    gv = str(tmp_path / "csr_only.gvel")
+    save_snapshot(gv, csr=oracle)
+    csr = load_csr(gv, engine="snapshot")
+    assert np.array_equal(np.asarray(csr.targets), np.asarray(oracle.targets))
+    with pytest.raises(SnapshotError, match="CSR-only"):
+        load_edgelist(gv, engine="snapshot")
+
+
+# ---- validation / rejection --------------------------------------------------
+
+def _valid_snapshot(tmp_path):
+    path, v, e, _ = _graph(tmp_path, weighted=False, base=1, seed=1)
+    gv, _ = _snapshot(tmp_path, path, weighted=False, base=1, v=v)
+    return gv
+
+
+def test_is_snapshot_sniff(tmp_path):
+    gv = _valid_snapshot(tmp_path)
+    assert is_snapshot(gv)
+    assert not is_snapshot(str(tmp_path / "g_False_1.el"))
+    assert not is_snapshot(str(tmp_path / "missing.gvel"))
+
+
+def test_bad_magic_rejected(tmp_path):
+    gv = _valid_snapshot(tmp_path)
+    with open(gv, "r+b") as f:
+        f.write(b"NOTGVEL!")
+    with pytest.raises(SnapshotError, match="magic"):
+        read_snapshot(gv)
+    # and a text engine never sees the binary: the front door raises too
+    with pytest.raises(SnapshotError, match="magic"):
+        load_csr(gv, engine="snapshot")
+
+
+def test_version_mismatch_rejected(tmp_path):
+    gv = _valid_snapshot(tmp_path)
+    with open(gv, "r+b") as f:
+        f.seek(len(MAGIC))
+        f.write(struct.pack("<I", VERSION + 1))
+    with pytest.raises(SnapshotError, match="version"):
+        read_snapshot(gv)
+
+
+def test_truncated_file_rejected(tmp_path):
+    gv = _valid_snapshot(tmp_path)
+    size = os.path.getsize(gv)
+    with open(gv, "r+b") as f:
+        f.truncate(size // 2)               # cuts into the section data
+    with pytest.raises(SnapshotError, match="truncated"):
+        read_snapshot(gv)
+    with open(gv, "r+b") as f:
+        f.truncate(16)                      # cuts into the header itself
+    with pytest.raises(SnapshotError, match="truncated"):
+        read_snapshot(gv)
+
+
+def test_weighted_request_on_unweighted_rejected(tmp_path):
+    gv = _valid_snapshot(tmp_path)
+    with pytest.raises(SnapshotError, match="unweighted"):
+        load_csr(gv, engine="snapshot", weighted=True)
+
+
+def test_save_rejects_mismatched_el_csr(tmp_path):
+    path, v, e, oracle = _graph(tmp_path, weighted=False, base=1, seed=2)
+    el = load_edgelist(path, engine="numpy", num_vertices=v)
+    half = int(el.num_edges) // 2
+    short = csr_np(np.asarray(el.src[:half]), np.asarray(el.dst[:half]),
+                   None, v)
+    with pytest.raises(ValueError, match="edges"):
+        save_snapshot(str(tmp_path / "bad.gvel"), edgelist=el, csr=short)
+    with pytest.raises(ValueError, match="needs"):
+        save_snapshot(str(tmp_path / "none.gvel"))
+
+
+def test_header_declares_counts(tmp_path):
+    gv = _valid_snapshot(tmp_path)
+    snap = read_snapshot(gv)
+    assert snap.version == VERSION
+    assert snap.num_edges == 400 and snap.num_vertices == 60
+    assert snap.has_edgelist and snap.has_csr and not snap.weighted
+    # sections are page-aligned views into the mmap, not copies
+    assert not snap.src.flags.writeable
+    assert snap.src.dtype == np.int32 and snap.csr_offsets.dtype == np.int64
