@@ -23,6 +23,8 @@ DATASETS = {
     "web_rmat": dict(kind="rmat", scale=15, edge_factor=16),      # ~524k edges
     "social_uniform": dict(kind="uniform", scale=15, edge_factor=8),
     "road_grid": dict(kind="grid", scale=16, edge_factor=0),
+    # small twin of web_rmat for --quick smoke runs (verify.sh)
+    "quick_rmat": dict(kind="rmat", scale=12, edge_factor=8),     # ~32k edges
 }
 
 

@@ -13,8 +13,21 @@ same graph converted once to a ``.gvel`` binary snapshot
 (``core.snapshot``), then loaded with zero parsing — either packed
 edgelist sections feeding the device CSR build (``snapshot_el``), or an
 embedded prebuilt CSR served straight from mmap (``snapshot_csr``).
+
+The compressed rows measure the trade the codec layer (``core.codecs``)
+buys: bytes on disk vs load time, with decompression overlapped with
+the parse in the prefetch thread (gzip / framed-zlib text in the
+streaming engine, zlib-framed ``.gvel`` v2 sections in the snapshot
+engine).  Each row's ``mb=`` field is its input's size on disk, so the
+ratio/throughput trade-off is measured, not asserted.
+
+``--quick`` (used by scripts/verify.sh) runs the same pipeline on a
+small graph with repeat=1 so the benchmark code itself cannot rot
+unexecuted.
 """
+import gzip
 import os
+import sys
 
 import numpy as np
 
@@ -72,26 +85,78 @@ def _snapshots(path, v):
     return el_snap, csr_snap
 
 
-def run():
+def _compressed(path, v):
+    """Compressed variants of the benchmark inputs (cached beside them):
+    gzip text, framed-zlib text, and a zlib-compressed CSR snapshot."""
+    from repro.core import (compress_file_framed, convert_to_csr,
+                            load_edgelist, save_snapshot)
+
+    gz, fz, zsnap = path + ".gz", path + ".elz", path + ".z.gvel"
+    if not os.path.exists(gz):
+        with open(path, "rb") as fin, open(gz, "wb") as fout:
+            fout.write(gzip.compress(fin.read(), 6))
+    if not os.path.exists(fz):
+        compress_file_framed(path, fz, codec="zlib")
+    if not os.path.exists(zsnap):
+        el = load_edgelist(path, engine="numpy", num_vertices=v)
+        save_snapshot(zsnap, edgelist=el,
+                      csr=convert_to_csr(el, method="staged", rho=4),
+                      compress="zlib")
+    return gz, fz, zsnap
+
+
+def _mb(path):
+    return f"mb={os.path.getsize(path) / 1e6:.2f}"
+
+
+def run(quick: bool = False):
     from repro.core import load_csr
 
-    path, v, e = dataset("web_rmat")
+    from repro.core import get_engine
+
+    path, v, e = dataset("quick_rmat" if quick else "web_rmat")
+    repeat = 1 if quick else 3
     el_snap, csr_snap = _snapshots(path, v)
-    t_old = timeit(lambda: _batch_roundtrip_csr(path, v), repeat=3)
+    gz, fz, zsnap = _compressed(path, v)
+    snap_eng = get_engine("snapshot")
+
+    def cold(p, **kw):
+        # measure a fresh open (validation + any decompression), not a
+        # hit on the engine's stat-validated in-process memo
+        snap_eng.clear_memo()
+        return load_csr(p, engine="snapshot", num_vertices=v, **kw)
+
+    t_old = timeit(lambda: _batch_roundtrip_csr(path, v), repeat=repeat)
     t_new = timeit(lambda: load_csr(path, engine="device", num_vertices=v,
-                                    method="staged"), repeat=3)
-    t_sel = timeit(lambda: load_csr(el_snap, engine="snapshot",
-                                    num_vertices=v, method="staged"), repeat=3)
-    t_scsr = timeit(lambda: load_csr(csr_snap, engine="snapshot",
-                                     num_vertices=v), repeat=3)
-    emit("e2e.load_csr_batch_roundtrip", t_old, f"edges_per_s={e / t_old:.3e}")
+                                    method="staged"), repeat=repeat)
+    t_sel = timeit(lambda: cold(el_snap, method="staged"), repeat=repeat)
+    t_scsr = timeit(lambda: cold(csr_snap), repeat=repeat)
+    t_gz = timeit(lambda: load_csr(gz, engine="device", num_vertices=v,
+                                   method="staged"), repeat=repeat)
+    t_fz = timeit(lambda: load_csr(fz, engine="device", num_vertices=v,
+                                   method="staged"), repeat=repeat)
+    t_zsnap = timeit(lambda: cold(zsnap), repeat=repeat)
+    emit("e2e.load_csr_batch_roundtrip", t_old,
+         f"edges_per_s={e / t_old:.3e};{_mb(path)}")
     emit("e2e.load_csr_streaming", t_new,
-         f"edges_per_s={e / t_new:.3e};speedup={t_old / t_new:.2f}x")
+         f"edges_per_s={e / t_new:.3e};speedup={t_old / t_new:.2f}x;"
+         f"{_mb(path)}")
     emit("e2e.load_csr_snapshot_el", t_sel,
-         f"edges_per_s={e / t_sel:.3e};vs_streaming={t_new / t_sel:.2f}x")
+         f"edges_per_s={e / t_sel:.3e};vs_streaming={t_new / t_sel:.2f}x;"
+         f"{_mb(el_snap)}")
     emit("e2e.load_csr_snapshot_csr", t_scsr,
-         f"edges_per_s={e / t_scsr:.3e};vs_streaming={t_new / t_scsr:.2f}x")
+         f"edges_per_s={e / t_scsr:.3e};vs_streaming={t_new / t_scsr:.2f}x;"
+         f"{_mb(csr_snap)}")
+    emit("e2e.load_csr_text_gz", t_gz,
+         f"edges_per_s={e / t_gz:.3e};vs_raw_text={t_new / t_gz:.2f}x;"
+         f"{_mb(gz)}")
+    emit("e2e.load_csr_text_framed_zlib", t_fz,
+         f"edges_per_s={e / t_fz:.3e};vs_raw_text={t_new / t_fz:.2f}x;"
+         f"{_mb(fz)}")
+    emit("e2e.load_csr_snapshot_csr_zlib", t_zsnap,
+         f"edges_per_s={e / t_zsnap:.3e};vs_raw_snapshot="
+         f"{t_scsr / t_zsnap:.2f}x;{_mb(zsnap)}")
 
 
 if __name__ == "__main__":
-    run()
+    run(quick="--quick" in sys.argv[1:])

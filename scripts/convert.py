@@ -24,8 +24,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def _is_mtx(path: str) -> bool:
-    with open(path, "rb") as f:
-        return f.read(14) == b"%%MatrixMarket"
+    # sniff through gzip/framed compression so matrix.mtx.gz converts too
+    from repro.core.codecs import peek_bytes
+    return peek_bytes(path, 14) == b"%%MatrixMarket"
 
 
 def main(argv=None) -> int:
@@ -54,11 +55,21 @@ def main(argv=None) -> int:
                     help="CSR build strategy for the embedded CSR")
     ap.add_argument("--rho", type=int, default=4,
                     help="partitions for the staged CSR build")
+    ap.add_argument("--compress", default=None, metavar="CODEC[:LEVEL]",
+                    help="store sections compressed (.gvel v2): zlib always, "
+                    "zstd when the zstandard package is installed; e.g. "
+                    "--compress zlib or --compress zstd:9")
     args = ap.parse_args(argv)
 
     from repro.core import (convert_to_csr, load_edgelist, mtx_to_snapshot,
                             read_snapshot, save_snapshot)
+    from repro.core.codecs import parse_codec_spec
     from repro.core.loader import csr_convert_engine
+
+    codec_name = level = None
+    if args.compress is not None:
+        codec, level = parse_codec_spec(args.compress)
+        codec_name = codec.name
 
     t0 = time.perf_counter()
     if _is_mtx(args.input):
@@ -73,7 +84,8 @@ def main(argv=None) -> int:
                   f"field/symmetry/base/|V| come from the MTX header",
                   file=sys.stderr)
         mtx_to_snapshot(args.input, args.output, engine=args.engine,
-                        csr=not args.no_csr, method=args.method, rho=args.rho)
+                        csr=not args.no_csr, method=args.method, rho=args.rho,
+                        compress=codec_name, compress_level=level)
     else:
         el = load_edgelist(args.input, engine=args.engine,
                            weighted=args.weighted, symmetric=args.symmetric,
@@ -82,15 +94,18 @@ def main(argv=None) -> int:
         if not args.no_csr:
             csr = convert_to_csr(el, method=args.method, rho=args.rho,
                                  engine=csr_convert_engine(args.engine))
-        save_snapshot(args.output, edgelist=el, csr=csr)
+        save_snapshot(args.output, edgelist=el, csr=csr,
+                      compress=codec_name, compress_level=level)
     t_convert = time.perf_counter() - t0
 
     snap = read_snapshot(args.output)
     in_sz = os.path.getsize(args.input)
     out_sz = os.path.getsize(args.output)
+    comp = f" codec={codec_name}" if codec_name else ""
     print(f"{args.input} ({in_sz / 1e6:.2f} MB) -> {args.output} "
-          f"({out_sz / 1e6:.2f} MB) in {t_convert * 1e3:.0f} ms")
-    print(f"  |V|={snap.num_vertices:,} |E|={snap.num_edges:,} "
+          f"({out_sz / 1e6:.2f} MB, {out_sz / max(in_sz, 1):.2f}x input)"
+          f"{comp} in {t_convert * 1e3:.0f} ms")
+    print(f"  |V|={snap.num_vertices:,} |E|={snap.num_edges:,} v{snap.version} "
           f"weighted={snap.weighted} edgelist={snap.has_edgelist} "
           f"csr={snap.has_csr}")
     return 0

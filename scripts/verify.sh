@@ -13,29 +13,42 @@ python -m pytest -x -q "$@"
 python scripts/check_links.py README.md docs
 
 # snapshot smoke: tiny text fixture -> scripts/convert.py -> load_csr
-# must match the csr_np host oracle
+# must match the csr_np host oracle, raw and zlib-compressed (.gvel v2)
 python - <<'PY'
 import os, subprocess, sys, tempfile
 import numpy as np
-from repro.core import load_csr, make_graph_file, read_edgelist_numpy
+from repro.core import load_csr, make_graph_file, read_edgelist_numpy, read_snapshot
 from repro.core.build import csr_np
 
 tmp = tempfile.mkdtemp(prefix="gvel_smoke_")
 el_path = os.path.join(tmp, "tiny.el")
 v, e = make_graph_file(el_path, "uniform", scale=8, edge_factor=4, seed=3)
-gv = os.path.join(tmp, "tiny.gvel")
-subprocess.run([sys.executable, "scripts/convert.py", el_path, gv,
-                "--num-vertices", str(v)], check=True)
-got = load_csr(gv, engine="snapshot")
 el = read_edgelist_numpy(el_path, num_vertices=v)
 n = int(el.num_edges)
 ref = csr_np(np.asarray(el.src[:n]), np.asarray(el.dst[:n]), None, v)
-assert np.array_equal(np.asarray(got.offsets, np.int64), ref.offsets)
-off = ref.offsets
-for u in range(v):
-    assert np.array_equal(np.sort(np.asarray(got.targets[off[u]:off[u+1]])),
-                          np.sort(ref.targets[off[u]:off[u+1]])), u
-print("snapshot smoke: convert.py round-trip OK")
+
+def check(gv):
+    got = load_csr(gv, engine="snapshot")
+    assert np.array_equal(np.asarray(got.offsets, np.int64), ref.offsets), gv
+    off = ref.offsets
+    for u in range(v):
+        assert np.array_equal(np.sort(np.asarray(got.targets[off[u]:off[u+1]])),
+                              np.sort(ref.targets[off[u]:off[u+1]])), (gv, u)
+
+gv = os.path.join(tmp, "tiny.gvel")
+subprocess.run([sys.executable, "scripts/convert.py", el_path, gv,
+                "--num-vertices", str(v)], check=True)
+check(gv)
+gvz = os.path.join(tmp, "tiny.z.gvel")
+subprocess.run([sys.executable, "scripts/convert.py", el_path, gvz,
+                "--num-vertices", str(v), "--compress", "zlib"], check=True)
+assert read_snapshot(gvz).version == 2
+check(gvz)
+print("snapshot smoke: convert.py round-trip OK (raw + zlib .gvel v2)")
 PY
+
+# benchmark smoke: the e2e loader benchmark (incl. compressed rows) must
+# still execute end to end — benchmark code can't rot unexecuted
+python -m benchmarks.e2e_load_csr --quick
 
 echo "verify: all green"

@@ -7,6 +7,8 @@ Public API:
     register_engine, available_engines   — the loader extension point
     save_snapshot, read_snapshot         — binary .gvel snapshots (zero-parse
                                            reload; see docs/snapshot-format.md)
+    register_codec, available_codecs     — compression codec registry; gzip /
+    write_framed, compress_file_framed     framed inputs load transparently
     read_edgelist, read_edgelist_numpy   — back-compat engine wrappers
     read_csr, convert_to_csr             — file/EdgeList -> CSR (staged)
     read_mtx, read_mtx_csr, mtx_to_snapshot — MatrixMarket with honored attrs
@@ -20,22 +22,26 @@ from .edgelist import read_edgelist, read_edgelist_numpy, symmetrize
 from .csr import convert_to_csr, read_csr, csr_to_dense
 from .mtx import read_mtx, read_mtx_csr, write_mtx, mtx_to_snapshot
 from .snapshot import save_snapshot, read_snapshot, Snapshot, SnapshotError
+from .codecs import (register_codec, get_codec, available_codecs,
+                     compress_file_framed, write_framed)
 from .generate import make_graph_file, rmat_edges, uniform_edges, grid_edges, write_edgelist
 from .distributed import load_csr_sharded, host_shard_and_load
-from . import (baselines, build, compat, degrees, loader, parse, parse_np,
-               blocks, snapshot)
+from . import (baselines, build, codecs, compat, degrees, loader, parse,
+               parse_np, blocks, snapshot)
 
 __all__ = [
     "CSR", "EdgeList", "GraphMeta",
     "load_edgelist", "load_csr", "register_engine", "get_engine",
     "available_engines", "LoaderEngine",
     "save_snapshot", "read_snapshot", "Snapshot", "SnapshotError",
+    "register_codec", "get_codec", "available_codecs",
+    "compress_file_framed", "write_framed",
     "read_edgelist", "read_edgelist_numpy", "symmetrize",
     "convert_to_csr", "read_csr", "csr_to_dense",
     "read_mtx", "read_mtx_csr", "write_mtx", "mtx_to_snapshot",
     "make_graph_file", "rmat_edges", "uniform_edges", "grid_edges",
     "write_edgelist",
     "load_csr_sharded", "host_shard_and_load",
-    "baselines", "build", "compat", "degrees", "loader", "parse",
+    "baselines", "build", "codecs", "compat", "degrees", "loader", "parse",
     "parse_np", "blocks", "snapshot",
 ]

@@ -53,6 +53,21 @@ def plan_blocks(file_len: int, beta: int = 256 * 1024, overlap: int = 64) -> Blo
     return BlockPlan(file_len, beta, overlap, num_blocks, overlap + beta)
 
 
+def _newline_flat(nb: int, plan: BlockPlan) -> np.ndarray:
+    """Newline-filled flat buffer spanning ``nb`` consecutive blocks
+    (one block's owned bytes per stride step, plus the final overlap)."""
+    return np.full((nb - 1) * plan.beta + plan.buf_len, NEWLINE, np.uint8)
+
+
+def _strided_block_view(flat: np.ndarray, nb: int, plan: BlockPlan) -> np.ndarray:
+    """Zero-copy per-block windows over a flat span.  Rows alias (row
+    r's overlap tail IS row r+1's head), so the view is read-only;
+    consumers copy into device buffers anyway."""
+    return np.lib.stride_tricks.as_strided(
+        flat, shape=(nb, plan.buf_len), strides=(plan.beta, 1),
+        writeable=False)
+
+
 def stage_blocks(data: np.ndarray, plan: BlockPlan, block_ids: np.ndarray) -> np.ndarray:
     """Gather block buffers (with left overlap) into an (nb, buf_len) array.
 
@@ -72,16 +87,11 @@ def stage_blocks(data: np.ndarray, plan: BlockPlan, block_ids: np.ndarray) -> np
         return np.zeros((0, plan.buf_len), np.uint8)
     if nb == 1 or np.all(np.diff(ids) == 1):
         lo = int(ids[0]) * plan.beta - plan.overlap        # may be < 0
-        flat_len = (nb - 1) * plan.beta + plan.buf_len
-        flat = np.full(flat_len, NEWLINE, np.uint8)
-        s, e = max(lo, 0), min(lo + flat_len, n)
+        flat = _newline_flat(nb, plan)
+        s, e = max(lo, 0), min(lo + len(flat), n)
         if e > s:
             flat[s - lo : e - lo] = data[s:e]
-        # rows alias (row r's overlap tail IS row r+1's head), so the view
-        # is read-only; consumers copy into device buffers anyway
-        return np.lib.stride_tricks.as_strided(
-            flat, shape=(nb, plan.buf_len), strides=(plan.beta, 1),
-            writeable=False)
+        return _strided_block_view(flat, nb, plan)
     # general (non-contiguous) case: per-block slice copies
     out = np.full((nb, plan.buf_len), NEWLINE, np.uint8)
     for row, b in enumerate(ids):
@@ -96,3 +106,110 @@ def stage_blocks(data: np.ndarray, plan: BlockPlan, block_ids: np.ndarray) -> np
 def owned_range(plan: BlockPlan) -> tuple[int, int]:
     """Buffer-local [start, end) of the owned byte range (uniform per block)."""
     return plan.overlap, plan.overlap + plan.beta
+
+
+# ---------------------------------------------------------------------------
+# block sources: where staged block bytes come from
+# ---------------------------------------------------------------------------
+#
+# The streaming loader used to stage straight off an mmap; compressed
+# inputs (core.codecs) need the same staging over bytes that only exist
+# after decompression.  A block source answers "give me the staged
+# buffers for these block ids" — random-access over memory, or
+# sequentially over a stream of decompressed chunks.  The loader's
+# prefetch thread drives `stage`, so for stream sources decompression
+# runs in that thread and overlaps the device parse.
+
+class MemoryBlockSource:
+    """Random-access staging over in-memory (usually mmap'd) bytes."""
+
+    def __init__(self, data: np.ndarray):
+        self.data = data
+        self.length = len(data)
+
+    def stage(self, plan: BlockPlan, block_ids: np.ndarray) -> np.ndarray:
+        return stage_blocks(self.data, plan, block_ids)
+
+    def finish(self) -> None:
+        pass
+
+
+class SequentialBlockSource:
+    """Staging over a forward-only stream of byte chunks.
+
+    ``chunks`` yields successive spans of the uncompressed byte stream
+    (any sizes, including empty); ``length`` is the total expected after
+    dropping the first ``skip`` bytes (an embedded-header offset, in
+    uncompressed coordinates).  Batches must be consumed in order with
+    contiguous ascending block ids — exactly how the streaming loader
+    iterates — and only ``overlap`` bytes of tail context are retained
+    between batches, so memory stays O(batch) regardless of file size.
+
+    ``finish`` drains the stream and verifies the total produced length
+    against ``length``: a stream that is shorter or longer than declared
+    (truncated file, lying gzip trailer) raises ``ValueError`` instead
+    of returning a silently partial graph.
+    """
+
+    def __init__(self, chunks, length: int, *, skip: int = 0,
+                 describe: str = "byte stream", mismatch_hint: str = ""):
+        self._chunks = iter(chunks)
+        self.length = max(int(length), 0)
+        self._to_skip = skip
+        self._describe = describe
+        self._hint = mismatch_hint
+        self._buf = bytearray()
+        self._buf_start = 0            # stream offset of _buf[0] (post-skip)
+        self._produced = 0             # post-skip bytes pulled so far
+        self._next_block = 0
+
+    def _pull(self) -> bool:
+        chunk = next(self._chunks, None)
+        if chunk is None:
+            return False
+        if self._to_skip:
+            drop = min(self._to_skip, len(chunk))
+            self._to_skip -= drop
+            chunk = chunk[drop:]
+        self._buf += chunk
+        self._produced += len(chunk)
+        return True
+
+    def stage(self, plan: BlockPlan, block_ids: np.ndarray) -> np.ndarray:
+        ids = np.asarray(block_ids, np.int64)
+        nb = len(ids)
+        if nb == 0:
+            return np.zeros((0, plan.buf_len), np.uint8)
+        if (nb > 1 and not np.all(np.diff(ids) == 1)) or \
+                int(ids[0]) != self._next_block:
+            raise ValueError(
+                f"{self._describe}: sequential source staged out of order "
+                f"(got blocks {ids[0]}..{ids[-1]}, expected "
+                f"{self._next_block}..)")
+        self._next_block = int(ids[-1]) + 1
+        lo = int(ids[0]) * plan.beta - plan.overlap          # may be < 0
+        hi = min((int(ids[-1]) + 1) * plan.beta, self.length)
+        while self._buf_start + len(self._buf) < hi:
+            if not self._pull():
+                break                 # short stream: pad now, finish() raises
+        flat = _newline_flat(nb, plan)
+        s = max(lo, 0)
+        e = min(hi, self._buf_start + len(self._buf))
+        if e > s:
+            off = s - self._buf_start
+            flat[s - lo : e - lo] = np.frombuffer(
+                self._buf, np.uint8, count=e - s, offset=off)
+        keep_from = max((int(ids[-1]) + 1) * plan.beta - plan.overlap, 0)
+        if keep_from > self._buf_start:
+            del self._buf[:keep_from - self._buf_start]
+            self._buf_start = keep_from
+        return _strided_block_view(flat, nb, plan)
+
+    def finish(self) -> None:
+        while self._pull():
+            pass
+        if self._produced != self.length:
+            raise ValueError(
+                f"{self._describe}: stream decompressed to "
+                f"{self._produced} bytes after the header offset, expected "
+                f"{self.length}{self._hint}")

@@ -1,0 +1,503 @@
+"""Transparent compression for every loading path: codecs + framed blocks.
+
+GVEL makes loading IO-bound; once parsing is off the critical path
+(snapshots, fused streaming) the remaining cost is bytes on disk.  This
+module lets every loader input arrive compressed:
+
+* a **codec registry** — stdlib ``zlib`` always, ``zstd`` auto-registered
+  when the ``zstandard`` package is importable.  Codecs are named for
+  CLIs (``--compress zlib:6``) and numbered for on-disk headers.
+* a **framed block format** — compressed payloads are a sequence of
+  independent frames, each one ``BlockPlan``-sized block of the original
+  bytes with its compressed length, uncompressed length, and CRC32.
+  Frames map 1:1 onto the staging blocks of :mod:`repro.core.blocks`,
+  so the streaming engines decompress frame *i+1* in the prefetch
+  thread while the device parses frame *i* (the ParaGrapher overlap:
+  compressed inputs can load faster than raw when the disk is slow).
+  The same frame stream is the payload of compressed ``.gvel`` v2
+  sections (:mod:`repro.core.snapshot`).
+* a **framed file container** (``.elz`` by convention, detected by
+  magic, never extension) for standalone compressed text edgelists, and
+  transparent ``.el.gz`` / gzip support via the stdlib.
+
+Every decompression path validates frame checksums and declared lengths
+and raises ``ValueError`` on any mismatch — a corrupted input must never
+come back as silently-wrong edges.
+"""
+from __future__ import annotations
+
+import dataclasses
+import gzip
+import io
+import os
+import struct
+import zlib
+from typing import Dict, Iterator, Optional, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+from .blocks import MemoryBlockSource, SequentialBlockSource, mmap_bytes
+
+# codec id 0 is reserved for "stored" (no compression) in on-disk headers
+CODEC_RAW = 0
+
+FRAME_HDR_FMT = "<III"            # comp_len, raw_len, crc32(raw payload)
+FRAME_HDR_LEN = struct.calcsize(FRAME_HDR_FMT)          # 12
+
+FRAMED_MAGIC = b"GVELFRMD"
+FRAMED_VERSION = 1
+# magic, version, codec_id, frame_beta, orig_len, frame_count, reserved
+FRAMED_HDR_FMT = "<8sIIQQII"
+FRAMED_HDR_LEN = struct.calcsize(FRAMED_HDR_FMT)        # 40
+
+GZIP_MAGIC = b"\x1f\x8b"
+
+DEFAULT_FRAME_BETA = 256 * 1024   # GVEL's beta: one frame per staging block
+
+# decompression chunk pulled per prefetch-thread step for gzip streams
+_GZ_CHUNK = 256 * 1024
+
+
+# ---------------------------------------------------------------------------
+# codec registry
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class Codec(Protocol):
+    """One compression algorithm.  ``codec_id`` is the stable on-disk
+    number (framed file headers, ``.gvel`` v2 section entries); ``name``
+    is the CLI/API handle."""
+
+    name: str
+    codec_id: int
+
+    def compress(self, data: bytes, level: Optional[int]) -> bytes: ...
+
+    def decompress(self, data: bytes, raw_len: int) -> bytes: ...
+
+
+class ZlibCodec:
+    """Stdlib zlib (DEFLATE) — always available, the tier-1 path."""
+
+    name = "zlib"
+    codec_id = 1
+
+    def compress(self, data: bytes, level: Optional[int] = None) -> bytes:
+        return zlib.compress(data, -1 if level is None else level)
+
+    def decompress(self, data: bytes, raw_len: int) -> bytes:
+        try:
+            return zlib.decompress(data, bufsize=max(raw_len, 64))
+        except zlib.error as exc:
+            raise ValueError(f"zlib frame decompression failed: {exc}") from None
+
+
+class ZstdCodec:
+    """``zstandard`` package; registered only when importable."""
+
+    name = "zstd"
+    codec_id = 2
+
+    def __init__(self):
+        import zstandard
+        self._mod = zstandard
+
+    def compress(self, data: bytes, level: Optional[int] = None) -> bytes:
+        cctx = self._mod.ZstdCompressor(level=3 if level is None else level)
+        return cctx.compress(data)
+
+    def decompress(self, data: bytes, raw_len: int) -> bytes:
+        try:
+            return self._mod.ZstdDecompressor().decompress(
+                data, max_output_size=max(raw_len, 64))
+        except self._mod.ZstdError as exc:
+            raise ValueError(f"zstd frame decompression failed: {exc}") from None
+
+
+_CODECS: Dict[str, Codec] = {}
+
+
+def register_codec(codec: Codec) -> Codec:
+    """Register under ``codec.name`` (last wins).  ``codec_id`` must be
+    unique and nonzero (0 is the reserved "stored" id)."""
+    if codec.codec_id == CODEC_RAW:
+        raise ValueError("codec_id 0 is reserved for uncompressed data")
+    for other in _CODECS.values():
+        if other.codec_id == codec.codec_id and other.name != codec.name:
+            raise ValueError(
+                f"codec_id {codec.codec_id} already taken by {other.name!r}")
+    _CODECS[codec.name] = codec
+    return codec
+
+
+def get_codec(name: str) -> Codec:
+    try:
+        return _CODECS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown codec {name!r}; available: {available_codecs()}"
+        ) from None
+
+
+def codec_for_id(codec_id: int) -> Codec:
+    for codec in _CODECS.values():
+        if codec.codec_id == codec_id:
+            return codec
+    hint = " (is the zstandard package installed?)" if codec_id == 2 else ""
+    raise ValueError(f"unknown codec id {codec_id}{hint}; "
+                     f"available: {available_codecs()}")
+
+
+def available_codecs() -> list[str]:
+    return sorted(_CODECS)
+
+
+def parse_codec_spec(spec: str) -> Tuple[Codec, Optional[int]]:
+    """``"zlib"`` / ``"zstd:9"`` -> (codec, level-or-None)."""
+    name, _, level = spec.partition(":")
+    codec = get_codec(name)
+    if not level:
+        return codec, None
+    try:
+        return codec, int(level)
+    except ValueError:
+        raise ValueError(f"bad codec level {level!r} in spec {spec!r}") from None
+
+
+register_codec(ZlibCodec())
+try:                               # capability check: zstd is optional
+    register_codec(ZstdCodec())
+except ImportError:
+    pass
+
+
+# ---------------------------------------------------------------------------
+# frame layer (shared by framed files and .gvel v2 sections)
+# ---------------------------------------------------------------------------
+
+def frame_count_for(raw_len: int, frame_beta: int) -> int:
+    """Frames in a stream over ``raw_len`` bytes (>= 1: empty input is
+    one empty frame, so every stream has a checksummed frame)."""
+    return max(1, -(-raw_len // frame_beta))
+
+
+def compress_frames(data, codec: Codec, *, level: Optional[int] = None,
+                    frame_beta: int = DEFAULT_FRAME_BETA) -> bytes:
+    """Bytes -> concatenated ``[header | payload]`` frames, one frame per
+    ``frame_beta``-sized block of the input (last may be short)."""
+    if frame_beta <= 0:
+        raise ValueError(f"frame_beta must be positive, got {frame_beta}")
+    if isinstance(data, (bytes, bytearray, memoryview)):
+        buf = bytes(data)
+    else:
+        buf = np.ascontiguousarray(np.asarray(data, np.uint8)).tobytes()
+    out = []
+    for lo in range(0, len(buf), frame_beta) or [0]:
+        raw = buf[lo:lo + frame_beta]
+        comp = codec.compress(raw, level)
+        out.append(struct.pack(FRAME_HDR_FMT, len(comp), len(raw),
+                               zlib.crc32(raw)))
+        out.append(comp)
+    return b"".join(out)
+
+
+def iter_decompressed_frames(payload, codec: Codec, *,
+                             context: str = "frame stream") -> Iterator[bytes]:
+    """Yield validated uncompressed frame payloads in order.
+
+    Raises ``ValueError`` on a truncated frame header or payload, a
+    declared-length mismatch after decompression, or a CRC32 mismatch —
+    corruption surfaces as an error, never as wrong bytes.
+    """
+    view = memoryview(payload)
+    pos = 0
+    while pos < len(view):
+        if pos + FRAME_HDR_LEN > len(view):
+            raise ValueError(
+                f"{context}: truncated frame header at byte {pos} "
+                f"({len(view) - pos} of {FRAME_HDR_LEN} bytes)")
+        comp_len, raw_len, crc = struct.unpack_from(FRAME_HDR_FMT, view, pos)
+        pos += FRAME_HDR_LEN
+        if pos + comp_len > len(view):
+            raise ValueError(
+                f"{context}: truncated frame payload at byte {pos} "
+                f"({len(view) - pos} of {comp_len} declared bytes)")
+        raw = codec.decompress(bytes(view[pos:pos + comp_len]), raw_len)
+        pos += comp_len
+        if len(raw) != raw_len:
+            raise ValueError(
+                f"{context}: frame declared {raw_len} uncompressed bytes "
+                f"but decompressed to {len(raw)}")
+        if zlib.crc32(raw) != crc:
+            raise ValueError(
+                f"{context}: frame checksum mismatch (corrupt payload)")
+        yield raw
+
+
+def decompress_frames(payload, raw_len: int, codec: Codec, *,
+                      context: str = "frame stream") -> np.ndarray:
+    """Whole frame stream -> uint8 array of exactly ``raw_len`` bytes."""
+    out = np.empty(raw_len, np.uint8)
+    pos = 0
+    for raw in iter_decompressed_frames(payload, codec, context=context):
+        if pos + len(raw) > raw_len:
+            raise ValueError(
+                f"{context}: frames decompress past the declared total "
+                f"({pos + len(raw)} > {raw_len} bytes)")
+        out[pos:pos + len(raw)] = np.frombuffer(raw, np.uint8)
+        pos += len(raw)
+    if pos != raw_len:
+        raise ValueError(f"{context}: frames decompress to {pos} bytes, "
+                         f"expected {raw_len}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# framed file container
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FramedInfo:
+    """Validated header of a framed compressed file."""
+
+    path: str
+    codec: Codec
+    frame_beta: int
+    orig_len: int
+    frame_count: int
+    payload_offset: int
+
+
+def write_framed(out_path: str, data, *, codec: str = "zlib",
+                 level: Optional[int] = None,
+                 frame_beta: int = DEFAULT_FRAME_BETA) -> None:
+    """Compress ``data`` (bytes / uint8 array) into a framed container."""
+    c = get_codec(codec)
+    buf = data if isinstance(data, (bytes, bytearray)) else \
+        np.asarray(data, np.uint8).tobytes()
+    payload = compress_frames(buf, c, level=level, frame_beta=frame_beta)
+    with open(out_path, "wb") as f:
+        f.write(struct.pack(FRAMED_HDR_FMT, FRAMED_MAGIC, FRAMED_VERSION,
+                            c.codec_id, frame_beta, len(buf),
+                            frame_count_for(len(buf), frame_beta), 0))
+        f.write(payload)
+
+
+def compress_file_framed(in_path: str, out_path: str, *, codec: str = "zlib",
+                         level: Optional[int] = None,
+                         frame_beta: int = DEFAULT_FRAME_BETA) -> None:
+    write_framed(out_path, mmap_bytes(in_path), codec=codec, level=level,
+                 frame_beta=frame_beta)
+
+
+def is_framed(path: str) -> bool:
+    try:
+        with open(path, "rb") as f:
+            return f.read(len(FRAMED_MAGIC)) == FRAMED_MAGIC
+    except OSError:
+        return False
+
+
+def is_gzip(path: str) -> bool:
+    try:
+        with open(path, "rb") as f:
+            return f.read(len(GZIP_MAGIC)) == GZIP_MAGIC
+    except OSError:
+        return False
+
+
+def compression_of(path: str) -> Optional[str]:
+    """``"framed"`` / ``"gzip"`` / None, by magic sniff (never extension)."""
+    if is_framed(path):
+        return "framed"
+    if is_gzip(path):
+        return "gzip"
+    return None
+
+
+def read_framed_header(path: str) -> FramedInfo:
+    size = os.path.getsize(path)
+    if size < FRAMED_HDR_LEN:
+        raise ValueError(f"{path}: truncated framed header ({size} bytes)")
+    with open(path, "rb") as f:
+        hdr = f.read(FRAMED_HDR_LEN)
+    magic, version, codec_id, frame_beta, orig_len, count, reserved = \
+        struct.unpack(FRAMED_HDR_FMT, hdr)
+    if magic != FRAMED_MAGIC:
+        raise ValueError(f"{path}: bad magic {magic!r}, not a framed file")
+    if version != FRAMED_VERSION:
+        raise ValueError(f"{path}: unsupported framed version {version} "
+                         f"(this reader supports {FRAMED_VERSION})")
+    if reserved != 0:
+        raise ValueError(f"{path}: nonzero reserved framed header field")
+    if frame_beta <= 0:
+        raise ValueError(f"{path}: framed header has frame_beta {frame_beta}")
+    try:
+        codec = codec_for_id(codec_id)
+    except ValueError as exc:
+        raise ValueError(f"{path}: {exc}") from None
+    if count != frame_count_for(orig_len, frame_beta):
+        raise ValueError(
+            f"{path}: header declares {count} frames, but {orig_len} bytes "
+            f"at frame_beta {frame_beta} is "
+            f"{frame_count_for(orig_len, frame_beta)}")
+    return FramedInfo(path, codec, frame_beta, orig_len, count,
+                      FRAMED_HDR_LEN)
+
+
+def _framed_chunks(info: FramedInfo) -> Iterator[bytes]:
+    """Sequential frame payloads of a framed file (prefetch-thread fuel).
+
+    The whole compressed payload is mmap'd (compressed bytes only —
+    small); each ``next()`` decompresses exactly one frame, so the
+    consumer controls how far ahead of the parser decompression runs.
+    """
+    data = mmap_bytes(info.path, info.payload_offset)
+    yield from iter_decompressed_frames(data, info.codec, context=info.path)
+
+
+def _gzip_chunks(path: str) -> Iterator[bytes]:
+    """Sequential ``_GZ_CHUNK``-sized chunks of a gzip file."""
+    try:
+        with gzip.open(path, "rb") as f:
+            while True:
+                chunk = f.read(_GZ_CHUNK)
+                if not chunk:
+                    return
+                yield chunk
+    except (EOFError, zlib.error, gzip.BadGzipFile) as exc:
+        raise ValueError(f"{path}: corrupt gzip stream: {exc}") from None
+
+
+def gzip_length_hint(path: str) -> int:
+    """Uncompressed length from the gzip trailer (ISIZE).
+
+    Exact for single-member files under 4 GiB; for multi-member or
+    huge files it understates, which the streaming reader detects and
+    rejects (use the framed container for those).
+    """
+    size = os.path.getsize(path)
+    if size < 18:                  # header (10) + trailer (8)
+        raise ValueError(f"{path}: truncated gzip file ({size} bytes)")
+    with open(path, "rb") as f:
+        f.seek(-4, os.SEEK_END)
+        return struct.unpack("<I", f.read(4))[0]
+
+
+# ---------------------------------------------------------------------------
+# loader integration: whole-file bytes, streams, block sources
+# ---------------------------------------------------------------------------
+
+def file_bytes(path: str, offset: int = 0) -> np.ndarray:
+    """Uncompressed file bytes as uint8, ``offset`` applied *after*
+    decompression (so MTX ``body_offset`` means the same thing for raw
+    and compressed inputs).  Raw files stay a zero-copy mmap; compressed
+    files are materialized in memory (host-parser path — the streaming
+    engines use :func:`open_block_source` instead and never hold the
+    whole decompressed file)."""
+    kind = compression_of(path)
+    if kind is None:
+        return mmap_bytes(path, offset)
+    if kind == "gzip":
+        data = np.frombuffer(b"".join(_gzip_chunks(path)), np.uint8)
+    else:
+        info = read_framed_header(path)
+        data = decompress_frames(mmap_bytes(path, info.payload_offset),
+                                 info.orig_len, info.codec, context=path)
+    return data[offset:] if offset else data
+
+
+class _FramedRawIO(io.RawIOBase):
+    """Minimal read-only raw IO over a framed file's uncompressed bytes
+    (forward-only; wrap in ``io.BufferedReader`` for readline/peek).
+
+    ``tell``/``seekable`` are implemented so ``BufferedReader.tell()``
+    reports *uncompressed* positions — header scanners (MTX) rely on
+    that to compute body offsets; actual seeking is unsupported.
+    """
+
+    def __init__(self, info: FramedInfo):
+        self._chunks = _framed_chunks(info)
+        self._pending = b""
+        self._pos = 0
+
+    def readable(self) -> bool:
+        return True
+
+    def seekable(self) -> bool:
+        return True                   # for BufferedReader.tell() only
+
+    def tell(self) -> int:
+        return self._pos
+
+    def seek(self, pos, whence=os.SEEK_SET):
+        if (whence == os.SEEK_SET and pos == self._pos) or \
+                (whence == os.SEEK_CUR and pos == 0):
+            return self._pos          # no-op seeks keep tell() working
+        raise io.UnsupportedOperation(
+            "framed streams are forward-only; seek is not supported")
+
+    def readinto(self, b) -> int:
+        while not self._pending:
+            chunk = next(self._chunks, None)
+            if chunk is None:
+                return 0
+            self._pending = chunk
+        n = min(len(b), len(self._pending))
+        b[:n] = self._pending[:n]
+        self._pending = self._pending[n:]
+        self._pos += n
+        return n
+
+
+def open_stream(path: str):
+    """Binary file-like over the *uncompressed* bytes of ``path`` —
+    ``tell()`` reports uncompressed positions, so header scanners (MTX)
+    compute body offsets that mean the same thing for every input."""
+    kind = compression_of(path)
+    if kind is None:
+        return open(path, "rb")
+    if kind == "gzip":
+        return gzip.open(path, "rb")
+    return io.BufferedReader(_FramedRawIO(read_framed_header(path)))
+
+
+def peek_bytes(path: str, n: int) -> bytes:
+    """First ``n`` uncompressed bytes (b"" on unreadable/corrupt files —
+    this is a sniffing helper, not a validator)."""
+    try:
+        with open_stream(path) as f:
+            return f.read(n)
+    except (OSError, ValueError, EOFError, zlib.error):
+        return b""
+
+
+def open_block_source(path: str, offset: int = 0):
+    """The streaming engines' input factory:
+    ``(block source, forced_beta-or-None)``.
+
+    Raw files get a random-access :class:`MemoryBlockSource` over the
+    mmap.  Compressed files get a :class:`SequentialBlockSource` whose
+    chunks are decompressed lazily — the loader's prefetch thread pulls
+    them, so decompression overlaps the device parse.  Framed files
+    force the plan's block size to ``frame_beta`` so frames map 1:1
+    onto staging blocks (one frame decompressed per block staged).
+    """
+    kind = compression_of(path)
+    if kind is None:
+        return MemoryBlockSource(mmap_bytes(path, offset)), None
+    if kind == "gzip":
+        length = gzip_length_hint(path)
+        source = SequentialBlockSource(
+            _gzip_chunks(path), length - offset, skip=offset,
+            describe=f"{path} (gzip)",
+            mismatch_hint=" (multi-member or >4 GiB gzip? the trailer "
+                          "length is unreliable there — recompress with "
+                          "repro.core.codecs.compress_file_framed, or use "
+                          "a host engine: numpy/threads)")
+        return source, None
+    info = read_framed_header(path)
+    source = SequentialBlockSource(
+        _framed_chunks(info), info.orig_len - offset, skip=offset,
+        describe=f"{path} (framed {info.codec.name})")
+    return source, info.frame_beta

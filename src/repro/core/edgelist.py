@@ -23,8 +23,14 @@ from typing import Optional
 import numpy as np
 
 from . import parse_np
-from .blocks import mmap_bytes as _mmap_bytes   # staging mmap lives in blocks
 from .types import EdgeList
+
+
+def _file_bytes(path: str, offset: int) -> np.ndarray:
+    """Uncompressed file bytes: a zero-copy mmap for raw files, an
+    in-memory decompression for gzip/framed inputs (core.codecs)."""
+    from .codecs import file_bytes
+    return file_bytes(path, offset)
 
 
 def symmetrize(el: EdgeList) -> EdgeList:
@@ -76,7 +82,7 @@ def read_edgelist_threads(
     """
     from concurrent.futures import ThreadPoolExecutor
 
-    data = _mmap_bytes(path, offset)
+    data = _file_bytes(path, offset)
     n_chunks = max(num_workers * chunks_per_worker,
                    len(data) // (256 * 1024))     # beta-sized: stay in L2
     bounds = parse_np.chunk_bounds(data, max(1, n_chunks))
@@ -121,7 +127,7 @@ def read_edgelist_numpy(
     vectorized passes resident in L2 — measured 2.7x over whole-file
     parsing on this host (see EXPERIMENTS.md fig2).
     """
-    data = _mmap_bytes(path, offset)
+    data = _file_bytes(path, offset)
     n = len(data)
     if num_chunks is None:
         num_chunks = max(1, -(-n // chunk_bytes))

@@ -30,9 +30,12 @@ The device/pallas engines are *streaming* (GVEL's pipelined read):
      rank-based CSR builders (``build.csr_global``/``csr_staged``), so
      file -> CSR never materializes a host-side EdgeList.
 
-New formats or backends register with :func:`register_engine`; the
-registry is the extension point for mtx/binary/compressed loaders
-(see ROADMAP.md "Open items").
+Compressed inputs are transparent at every entry point: gzip and
+framed files (``core.codecs``) are sniffed by magic, streamed through
+the same double-buffered pipeline with decompression in the prefetch
+thread, and handed decompressed to the host engines.  New formats or
+backends register with :func:`register_engine`; the registry is the
+extension point for new loaders (see ROADMAP.md "Open items").
 
 Engine contract: ``read_edgelist`` must return the raw (asymmetric)
 edge set; symmetrization happens once, in the front door.
@@ -48,8 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import build
-from .blocks import NEWLINE, mmap_bytes as _mmap_bytes, owned_range, \
-    plan_blocks, stage_blocks
+from .blocks import NEWLINE, owned_range, plan_blocks
 from .parse import parse_blocks
 from .types import CSR, EdgeList
 
@@ -144,9 +146,19 @@ def _stream_edges(
     Returns ((src, dst, w, total), capacity).  The prefetch thread stages
     batch i+1 while the (async-dispatched) jitted parser and accumulator
     work on batch i, so host staging overlaps device compute.
+
+    Compressed inputs (``.el.gz`` / framed — sniffed by magic in
+    :func:`codecs.open_block_source`) ride the same pipeline: the block
+    source decompresses inside ``stage``, i.e. in the prefetch thread,
+    so decompression overlaps the device parse exactly like raw-file IO
+    does.  Framed files force ``beta`` to the file's frame size so
+    frames map 1:1 onto staging blocks.
     """
-    data = _mmap_bytes(path, offset)
-    plan = plan_blocks(len(data), beta=beta, overlap=overlap)
+    from .codecs import open_block_source
+    source, forced_beta = open_block_source(path, offset)
+    if forced_beta is not None and forced_beta > overlap:
+        beta = forced_beta
+    plan = plan_blocks(source.length, beta=beta, overlap=overlap)
     os_, oe = owned_range(plan)
     edge_cap = plan.edge_cap
     num_batches = -(-plan.num_blocks // batch_blocks)
@@ -169,7 +181,7 @@ def _stream_edges(
     def stage(i: int) -> np.ndarray:
         start = i * batch_blocks
         ids = np.arange(start, min(start + batch_blocks, plan.num_blocks))
-        bufs = stage_blocks(data, plan, ids)
+        bufs = source.stage(plan, ids)
         if len(ids) < batch_blocks:    # pad batch to keep one jitted program
             pad = np.full((batch_blocks - len(ids), plan.buf_len), NEWLINE,
                           np.uint8)
@@ -201,6 +213,9 @@ def _stream_edges(
             acc_src, acc_dst, acc_w, total = _accumulate_batch(
                 acc_src, acc_dst, acc_w, total, src_b, dst_b, w_b, counts,
                 cap=cap)
+    # A stream shorter/longer than its header declared (truncated file,
+    # lying gzip trailer) must fail here, not return a partial graph.
+    source.finish()
     return (acc_src, acc_dst, acc_w, total), cap
 
 
@@ -278,6 +293,16 @@ def _resolve_engine(path: str, engine: str, offset: int) -> str:
         from .snapshot import is_snapshot
         if is_snapshot(path):
             return "snapshot"
+        from .codecs import compression_of, peek_bytes
+        if compression_of(path) is not None:
+            from .snapshot import MAGIC
+            if peek_bytes(path, len(MAGIC)) == MAGIC:
+                # A whole-file-compressed snapshot would decode as text
+                # garbage; .gvel v2 compresses *inside* the container.
+                raise ValueError(
+                    f"{path}: externally compressed .gvel snapshot; "
+                    f"decompress it, or recreate it with internal section "
+                    f"compression (scripts/convert.py --compress)")
     return engine
 
 

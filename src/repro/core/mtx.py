@@ -29,7 +29,11 @@ class MtxHeader:
 
 
 def read_header(path: str) -> MtxHeader:
-    with open(path, "rb") as f:
+    # open_stream decompresses gzip/framed MTX transparently; tell() is in
+    # uncompressed coordinates, so body_offset means the same thing either
+    # way (the engines apply offsets after decompression too).
+    from .codecs import open_stream
+    with open_stream(path) as f:
         banner = f.readline()
         if not banner.startswith(b"%%MatrixMarket"):
             raise ValueError(f"{path}: missing MatrixMarket banner")
@@ -103,8 +107,9 @@ def read_mtx_csr(path: str, *, method: str = "staged", rho: int = 4,
 
 
 def mtx_to_snapshot(path: str, out_path: str, *, engine: str = "numpy",
-                    csr: bool = True, method: str = "staged",
-                    rho: int = 4) -> GraphMeta:
+                    csr: bool = True, method: str = "staged", rho: int = 4,
+                    compress: str | None = None,
+                    compress_level: int | None = None) -> GraphMeta:
     """Convert an MTX file to a binary ``.gvel`` snapshot (parse once).
 
     Header attributes are honored during the conversion — a symmetric
@@ -123,7 +128,8 @@ def mtx_to_snapshot(path: str, out_path: str, *, engine: str = "numpy",
     if csr:
         csr_obj = convert_to_csr(el, method=method, rho=rho,
                                  engine=csr_convert_engine(engine))
-    save_snapshot(out_path, edgelist=el, csr=csr_obj)
+    save_snapshot(out_path, edgelist=el, csr=csr_obj, compress=compress,
+                  compress_level=compress_level)
     return hdr.meta
 
 

@@ -14,14 +14,18 @@ Layout (all integers little-endian; byte-level spec in
 
     header (40 bytes):
         magic     8s   b"GVELSNAP"
-        version   u32  1
+        version   u32  1 (raw sections) or 2 (sections may be compressed)
         flags     u32  bit 0 WEIGHTED, bit 1 HAS_EDGELIST, bit 2 HAS_CSR
         num_vertices  u64
         num_edges     u64
         section_count u32
         reserved      u32  (must be 0)
-    section table entry (24 bytes each):
+    section table entry (v1, 24 bytes each):
         section_id u32, dtype_code u32, offset u64, nbytes u64
+    section table entry (v2, 40 bytes each):
+        v1 fields + codec_id u32 (0 = stored), reserved u32,
+        raw_nbytes u64; compressed payloads are ``core.codecs`` frame
+        streams (per-frame lengths + CRC32)
 
 Every section starts on a 4096-byte (page) boundary so an mmap'd reader
 hands out aligned, typed, read-only views with no copying and no
@@ -50,11 +54,16 @@ from .blocks import mmap_bytes
 from .types import CSR, EdgeList
 
 MAGIC = b"GVELSNAP"
-VERSION = 1
+VERSION = 1                        # written when no v2 feature is used
+VERSION_COMPRESSED = 2             # v2: section table entries carry a codec
+SUPPORTED_VERSIONS = (VERSION, VERSION_COMPRESSED)
 HEADER_FMT = "<8sIIQQII"           # magic, version, flags, V, E, n_sections, reserved
 HEADER_LEN = struct.calcsize(HEADER_FMT)       # 40
 SECTION_FMT = "<IIQQ"              # id, dtype code, byte offset, byte length
 SECTION_LEN = struct.calcsize(SECTION_FMT)     # 24
+# v2 entry: v1 fields + codec id, reserved (0), uncompressed byte length
+SECTION_FMT_V2 = "<IIQQIIQ"
+SECTION_LEN_V2 = struct.calcsize(SECTION_FMT_V2)   # 40
 ALIGN = 4096                       # sections are page-aligned
 
 FLAG_WEIGHTED = 1 << 0
@@ -116,10 +125,10 @@ def peek_header(path: str) -> Tuple[int, int, int, int, int]:
     magic, version, flags, v, e, count, reserved = struct.unpack(HEADER_FMT, hdr)
     if magic != MAGIC:
         raise SnapshotError(f"{path}: bad magic {magic!r}, not a .gvel snapshot")
-    if version != VERSION:
+    if version not in SUPPORTED_VERSIONS:
         raise SnapshotError(
             f"{path}: unsupported snapshot version {version} "
-            f"(this reader supports {VERSION})")
+            f"(this reader supports {SUPPORTED_VERSIONS})")
     if reserved != 0:
         raise SnapshotError(f"{path}: nonzero reserved header field")
     return version, flags, v, e, count
@@ -134,6 +143,9 @@ def save_snapshot(
     *,
     edgelist: Optional[EdgeList] = None,
     csr: Optional[CSR] = None,
+    compress: Optional[str] = None,
+    compress_level: Optional[int] = None,
+    frame_beta: Optional[int] = None,
 ) -> None:
     """Write a ``.gvel`` snapshot from loader outputs.
 
@@ -143,6 +155,12 @@ def save_snapshot(
     are stored as-is — loader outputs are already 0-based.  A CSR must
     be global (``row_start == 0``); shard-local CSRs have no file-level
     meaning.
+
+    ``compress`` names a registered codec (``"zlib"``, ``"zstd"`` when
+    available); section payloads are then stored as checksummed frame
+    streams (``core.codecs``) and the file is written as version 2.
+    With ``compress=None`` (default) the output is a byte-identical
+    version-1 file — readable by any v1 reader.
     """
     if edgelist is None and csr is None:
         raise ValueError("save_snapshot needs an edgelist, a csr, or both")
@@ -198,23 +216,45 @@ def save_snapshot(
         if num_edges is None:
             num_edges = int(indices.shape[0])
 
+    if compress is not None:
+        from . import codecs
+        codec = codecs.get_codec(compress)
+        beta = codecs.DEFAULT_FRAME_BETA if frame_beta is None else frame_beta
+        version = VERSION_COMPRESSED
+        payloads = [(sid, arr,
+                     codecs.compress_frames(arr.tobytes(), codec,
+                                            level=compress_level,
+                                            frame_beta=beta))
+                    for sid, arr in sections]
+    else:
+        codec = None
+        version = VERSION
+        payloads = [(sid, arr, None) for sid, arr in sections]
+
     # layout: header, table, then page-aligned sections in table order
+    entry_len = SECTION_LEN if version == VERSION else SECTION_LEN_V2
     table = []
-    off = HEADER_LEN + len(sections) * SECTION_LEN
-    for sid, arr in sections:
+    off = HEADER_LEN + len(sections) * entry_len
+    for sid, arr, comp in payloads:
         off = _align(off)
-        table.append((sid, _dtype_code(arr.dtype), off, arr.nbytes))
-        off += arr.nbytes
+        stored = arr.nbytes if comp is None else len(comp)
+        if version == VERSION:
+            table.append((sid, _dtype_code(arr.dtype), off, stored))
+        else:
+            table.append((sid, _dtype_code(arr.dtype), off, stored,
+                          codec.codec_id, 0, arr.nbytes))
+        off += stored
     end = off
 
     with open(path, "wb") as f:
-        f.write(struct.pack(HEADER_FMT, MAGIC, VERSION, flags,
+        f.write(struct.pack(HEADER_FMT, MAGIC, version, flags,
                             num_vertices, num_edges, len(sections), 0))
+        fmt = SECTION_FMT if version == VERSION else SECTION_FMT_V2
         for entry in table:
-            f.write(struct.pack(SECTION_FMT, *entry))
-        for (sid, arr), (_, _, soff, _) in zip(sections, table):
-            f.seek(soff)
-            f.write(arr.tobytes())
+            f.write(struct.pack(fmt, *entry))
+        for (sid, arr, comp), entry in zip(payloads, table):
+            f.seek(entry[2])
+            f.write(arr.tobytes() if comp is None else comp)
         # zero-length tail sections may point past the last written byte;
         # extend so every (offset, offset + nbytes) range is in-file
         f.truncate(end)
@@ -228,8 +268,11 @@ def save_snapshot(
 class Snapshot:
     """A validated, mmap-backed view of a ``.gvel`` file.
 
-    Array fields are read-only numpy views straight into the page cache
-    — no bytes are copied or parsed at load time.
+    For v1 files (and uncompressed v2 sections) the array fields are
+    read-only numpy views straight into the page cache — no bytes are
+    copied or parsed at load time.  Compressed v2 sections are
+    decompressed and checksummed at read time into read-only in-memory
+    arrays (see :func:`read_snapshot`).
     """
 
     path: str
@@ -271,10 +314,22 @@ class Snapshot:
 
 
 def read_snapshot(path: str) -> Snapshot:
-    """mmap + validate a ``.gvel`` file; returns typed zero-copy views."""
+    """mmap + validate a ``.gvel`` file; returns typed zero-copy views
+    (v1 / uncompressed sections) or decompressed arrays (v2 compressed
+    sections).
+
+    Compressed sections are decompressed — and therefore checksummed —
+    *eagerly*, so corruption surfaces here, at open, never later from a
+    served array.  That means opening a snapshot with both an edgelist
+    and a CSR decompresses both even if the caller only wants one;
+    lazy per-section decompression is an open item (ROADMAP.md).
+    """
     version, flags, num_vertices, num_edges, count = peek_header(path)
     size = os.path.getsize(path)
-    table_end = HEADER_LEN + count * SECTION_LEN
+    v2 = version == VERSION_COMPRESSED
+    entry_fmt = SECTION_FMT_V2 if v2 else SECTION_FMT
+    entry_len = SECTION_LEN_V2 if v2 else SECTION_LEN
+    table_end = HEADER_LEN + count * entry_len
     if size < table_end:
         raise SnapshotError(
             f"{path}: truncated section table ({size} < {table_end} bytes)")
@@ -283,8 +338,16 @@ def read_snapshot(path: str) -> Snapshot:
 
     views = {}
     for i in range(count):
-        sid, code, off, nbytes = struct.unpack_from(SECTION_FMT, raw,
-                                                    i * SECTION_LEN)
+        if v2:
+            sid, code, off, nbytes, codec_id, rsvd, raw_nbytes = \
+                struct.unpack_from(entry_fmt, raw, i * entry_len)
+            if rsvd != 0:
+                raise SnapshotError(f"{path}: section {sid} has nonzero "
+                                    f"reserved table field")
+        else:
+            sid, code, off, nbytes = struct.unpack_from(entry_fmt, raw,
+                                                        i * entry_len)
+            codec_id, raw_nbytes = 0, nbytes
         if sid not in (SEC_SRC, SEC_DST, SEC_EDGE_WEIGHTS, SEC_CSR_OFFSETS,
                        SEC_CSR_INDICES, SEC_CSR_WEIGHTS):
             continue                    # forward compat: skip unknown sections
@@ -299,10 +362,28 @@ def read_snapshot(path: str) -> Snapshot:
             raise SnapshotError(
                 f"{path}: truncated — section {sid} spans "
                 f"[{off}, {off + nbytes}) but file is {size} bytes")
-        if nbytes % dtype.itemsize:
-            raise SnapshotError(f"{path}: section {sid} length {nbytes} is "
-                                f"not a multiple of {dtype.itemsize}")
-        views[sid] = data[off:off + nbytes].view(dtype)
+        if raw_nbytes % dtype.itemsize:
+            raise SnapshotError(f"{path}: section {sid} length {raw_nbytes} "
+                                f"is not a multiple of {dtype.itemsize}")
+        if codec_id == 0:
+            if raw_nbytes != nbytes:
+                raise SnapshotError(
+                    f"{path}: uncompressed section {sid} declares "
+                    f"{raw_nbytes} raw bytes but stores {nbytes}")
+            views[sid] = data[off:off + nbytes].view(dtype)
+        else:
+            # compressed section: decompress the checksummed frame stream
+            # (corruption raises, never silently-wrong arrays)
+            from . import codecs
+            try:
+                codec = codecs.codec_for_id(codec_id)
+                arr = codecs.decompress_frames(
+                    data[off:off + nbytes], raw_nbytes, codec,
+                    context=f"{path} section {sid}")
+            except ValueError as exc:
+                raise SnapshotError(str(exc)) from None
+            arr.flags.writeable = False     # parity with the mmap views
+            views[sid] = arr.view(dtype)
 
     def expect(sid: int, name: str, length: int) -> np.ndarray:
         arr = views.get(sid)
@@ -352,10 +433,13 @@ class SnapshotEngine:
         """One open + validation per file per ``load_csr`` call: the
         front door probes ``read_csr_prebuilt`` / ``num_vertices_hint``
         / ``stream`` in sequence, so memoize on (path, mtime, size).
-        A stale entry only costs a re-read; views are zero-copy, so the
-        memo pins one mmap, not file contents.  The (key, value) pair is
-        written as one tuple so concurrent loads of different files race
-        only on which entry survives, never on a mixed key/value.
+        A stale entry only costs a re-read.  For v1 snapshots the memo
+        pins one mmap (views are zero-copy); for compressed v2
+        snapshots it pins the last-loaded file's *decompressed* section
+        arrays until the next load — call :meth:`clear_memo` to release
+        them early.  The (key, value) pair is written as one tuple so
+        concurrent loads of different files race only on which entry
+        survives, never on a mixed key/value.
         """
         st = os.stat(path)
         key = (path, st.st_mtime_ns, st.st_size)
@@ -365,6 +449,11 @@ class SnapshotEngine:
         snap = read_snapshot(path)
         self._memo = (key, snap)
         return snap
+
+    def clear_memo(self) -> None:
+        """Drop the memoized snapshot (frees a compressed v2 snapshot's
+        decompressed arrays; the next load re-reads the file)."""
+        self._memo = None
 
     @staticmethod
     def _check(snap: Snapshot, *, weighted: bool, offset: int) -> None:

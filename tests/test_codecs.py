@@ -1,0 +1,308 @@
+"""Codec registry + framed block format: round-trips and the corruption
+matrix (truncation, bit flips, lying lengths, unknown codecs — every
+case must raise, never return wrong bytes)."""
+import gzip
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core import codecs
+from repro.core.blocks import SequentialBlockSource, plan_blocks, stage_blocks
+from repro.core.codecs import (FRAMED_HDR_LEN, FRAME_HDR_LEN,
+                               available_codecs, compress_frames,
+                               decompress_frames, file_bytes, get_codec,
+                               parse_codec_spec, read_framed_header,
+                               write_framed)
+
+
+def _payload(n=10000, seed=0):
+    return bytes(np.random.default_rng(seed).integers(
+        32, 120, n, dtype=np.uint8))
+
+
+# ---- registry ----------------------------------------------------------------
+
+def test_zlib_always_registered():
+    assert "zlib" in available_codecs()
+    assert get_codec("zlib").codec_id == 1
+
+
+def test_zstd_registered_iff_importable():
+    try:
+        import zstandard  # noqa: F401
+        assert "zstd" in available_codecs()
+    except ImportError:
+        assert "zstd" not in available_codecs()
+
+
+def test_unknown_codec_lists_available():
+    with pytest.raises(ValueError, match="zlib"):
+        get_codec("no-such-codec")
+    with pytest.raises(ValueError, match="unknown codec id"):
+        codecs.codec_for_id(250)
+
+
+def test_codec_id_zero_reserved():
+    class Bad:
+        name, codec_id = "bad", 0
+
+        def compress(self, d, level):
+            return d
+
+        def decompress(self, d, n):
+            return d
+
+    with pytest.raises(ValueError, match="reserved"):
+        codecs.register_codec(Bad())
+
+
+def test_parse_codec_spec():
+    codec, level = parse_codec_spec("zlib")
+    assert codec.name == "zlib" and level is None
+    codec, level = parse_codec_spec("zlib:9")
+    assert level == 9
+    with pytest.raises(ValueError, match="level"):
+        parse_codec_spec("zlib:fast")
+    with pytest.raises(ValueError, match="unknown codec"):
+        parse_codec_spec("lzma")
+
+
+def test_zstd_codec_roundtrip():
+    pytest.importorskip("zstandard")
+    c = get_codec("zstd")
+    data = _payload()
+    assert c.decompress(c.compress(data, None), len(data)) == data
+
+
+# ---- frame layer -------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [0, 1, 100, 4096, 4097, 3 * 4096])
+def test_frames_roundtrip_sizes(n):
+    data = _payload(n)
+    stream = compress_frames(data, get_codec("zlib"), frame_beta=4096)
+    out = decompress_frames(stream, n, get_codec("zlib"))
+    assert bytes(out) == data
+
+
+def test_frames_truncated_header_rejected():
+    data = _payload()
+    stream = compress_frames(data, get_codec("zlib"), frame_beta=4096)
+    with pytest.raises(ValueError, match="truncated frame"):
+        decompress_frames(stream[:-1], len(data), get_codec("zlib"))
+    with pytest.raises(ValueError, match="truncated frame header"):
+        decompress_frames(stream[:FRAME_HDR_LEN - 2], len(data),
+                          get_codec("zlib"))
+
+
+def test_frames_bitflip_rejected():
+    data = _payload()
+    stream = bytearray(compress_frames(data, get_codec("zlib"),
+                                       frame_beta=4096))
+    stream[FRAME_HDR_LEN + 5] ^= 0x40            # flip a payload bit
+    with pytest.raises(ValueError):              # zlib error or crc mismatch
+        decompress_frames(bytes(stream), len(data), get_codec("zlib"))
+
+
+def test_frames_crc_mismatch_rejected():
+    # recompress the frame with different bytes but keep the old header crc
+    codec = get_codec("zlib")
+    good, evil = b"x" * 100, b"y" * 100
+    comp_evil = codec.compress(evil, None)
+    stream = struct.pack(codecs.FRAME_HDR_FMT, len(comp_evil), 100,
+                         __import__("zlib").crc32(good)) + comp_evil
+    with pytest.raises(ValueError, match="checksum"):
+        decompress_frames(stream, 100, codec)
+
+
+def test_frames_wrong_declared_raw_len_rejected():
+    codec = get_codec("zlib")
+    raw = b"z" * 100
+    comp = codec.compress(raw, None)
+    stream = struct.pack(codecs.FRAME_HDR_FMT, len(comp), 200,
+                         __import__("zlib").crc32(raw)) + comp
+    with pytest.raises(ValueError, match="declared 200"):
+        decompress_frames(stream, 200, codec)
+
+
+def test_frames_total_length_mismatch_rejected():
+    data = _payload(1000)
+    stream = compress_frames(data, get_codec("zlib"), frame_beta=4096)
+    with pytest.raises(ValueError, match="declared total"):
+        decompress_frames(stream, 999, get_codec("zlib"))
+    with pytest.raises(ValueError, match="expected 1001"):
+        decompress_frames(stream, 1001, get_codec("zlib"))
+
+
+# ---- framed file container ---------------------------------------------------
+
+def test_framed_file_roundtrip(tmp_path):
+    data = _payload(50000)
+    path = str(tmp_path / "x.elz")
+    write_framed(path, data, codec="zlib", frame_beta=4096)
+    assert codecs.is_framed(path)
+    assert codecs.compression_of(path) == "framed"
+    info = read_framed_header(path)
+    assert info.orig_len == 50000 and info.frame_beta == 4096
+    assert info.frame_count == 13 and info.codec.name == "zlib"
+    assert bytes(file_bytes(path)) == data
+    assert bytes(file_bytes(path, offset=100)) == data[100:]
+
+
+def test_framed_unknown_codec_id_rejected(tmp_path):
+    data = _payload(100)
+    path = str(tmp_path / "x.elz")
+    write_framed(path, data, codec="zlib")
+    with open(path, "r+b") as f:
+        f.seek(12)                               # codec_id field
+        f.write(struct.pack("<I", 77))
+    with pytest.raises(ValueError, match="unknown codec id 77"):
+        file_bytes(path)
+
+
+def test_framed_bad_version_rejected(tmp_path):
+    path = str(tmp_path / "x.elz")
+    write_framed(path, b"hello", codec="zlib")
+    with open(path, "r+b") as f:
+        f.seek(8)
+        f.write(struct.pack("<I", 9))
+    with pytest.raises(ValueError, match="version 9"):
+        file_bytes(path)
+
+
+def test_framed_header_frame_count_mismatch_rejected(tmp_path):
+    path = str(tmp_path / "x.elz")
+    write_framed(path, _payload(10000), codec="zlib", frame_beta=4096)
+    with open(path, "r+b") as f:
+        f.seek(32)                               # frame_count field
+        f.write(struct.pack("<I", 1))
+    with pytest.raises(ValueError, match="frames"):
+        read_framed_header(path)
+
+
+def test_framed_truncated_payload_rejected(tmp_path):
+    path = str(tmp_path / "x.elz")
+    write_framed(path, _payload(10000), codec="zlib", frame_beta=1024)
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size - 7)
+    with pytest.raises(ValueError, match="truncated"):
+        file_bytes(path)
+    with open(path, "r+b") as f:
+        f.truncate(FRAMED_HDR_LEN - 3)
+    with pytest.raises(ValueError, match="truncated framed header"):
+        file_bytes(path)
+
+
+# ---- gzip --------------------------------------------------------------------
+
+def test_gzip_roundtrip(tmp_path):
+    data = _payload(30000)
+    path = str(tmp_path / "x.gz")
+    with open(path, "wb") as f:
+        f.write(gzip.compress(data))
+    assert codecs.compression_of(path) == "gzip"
+    assert bytes(file_bytes(path)) == data
+    assert codecs.gzip_length_hint(path) == 30000
+
+
+def test_gzip_corrupt_rejected(tmp_path):
+    data = gzip.compress(_payload(30000))
+    path = str(tmp_path / "x.gz")
+    with open(path, "wb") as f:
+        f.write(data[: len(data) // 2])          # truncated mid-stream
+    with pytest.raises(ValueError, match="gzip"):
+        file_bytes(path)
+
+
+def test_peek_bytes_on_truncated_gzip_is_empty(tmp_path):
+    """Sniffing a gzip truncated inside its first deflate block must
+    return b'' (and the loader a ValueError), not leak EOFError."""
+    full = gzip.compress(b"1 2\n" * 500)
+    path = str(tmp_path / "t.el.gz")
+    with open(path, "wb") as f:
+        f.write(full[:14])
+    assert codecs.peek_bytes(path, 8) == b""
+    with pytest.raises(ValueError, match="gzip"):
+        file_bytes(path)
+
+
+def test_open_stream_framed_tell_reports_uncompressed_positions(tmp_path):
+    """MTX header scanning needs tell() on framed streams."""
+    data = b"header line\nbody starts here\nmore\n"
+    path = str(tmp_path / "x.elz")
+    write_framed(path, data, codec="zlib", frame_beta=8)
+    with codecs.open_stream(path) as f:
+        assert f.readline() == b"header line\n"
+        assert f.tell() == len(b"header line\n")
+        assert f.read() == b"body starts here\nmore\n"
+
+
+def test_raw_file_not_sniffed_as_compressed(tmp_path):
+    path = str(tmp_path / "x.el")
+    with open(path, "w") as f:
+        f.write("1 2\n")
+    assert codecs.compression_of(path) is None
+    assert bytes(file_bytes(path)) == b"1 2\n"
+
+
+# ---- sequential block source vs random-access staging ------------------------
+
+@pytest.mark.parametrize("beta,batch", [(4096, 3), (1024, 1), (2048, 8)])
+def test_sequential_source_stage_parity(tmp_path, beta, batch):
+    data = _payload(33333, seed=5)
+    path = str(tmp_path / "x.elz")
+    write_framed(path, data, codec="zlib", frame_beta=beta)
+    source, forced = codecs.open_block_source(path)
+    assert forced == beta
+    plan = plan_blocks(source.length, beta=beta, overlap=64)
+    raw = np.frombuffer(data, np.uint8)
+    for start in range(0, plan.num_blocks, batch):
+        ids = np.arange(start, min(start + batch, plan.num_blocks))
+        got = np.array(source.stage(plan, ids))
+        assert np.array_equal(got, stage_blocks(raw, plan, ids)), start
+    source.finish()
+
+
+def test_sequential_source_out_of_order_rejected():
+    src = SequentialBlockSource(iter([b"a" * 100]), 100)
+    plan = plan_blocks(100, beta=80, overlap=8)
+    with pytest.raises(ValueError, match="out of order"):
+        src.stage(plan, np.array([1]))
+
+
+def test_sequential_source_short_stream_rejected():
+    src = SequentialBlockSource(iter([b"a" * 50]), 100, describe="test stream")
+    plan = plan_blocks(100, beta=80, overlap=8)
+    for i in range(plan.num_blocks):
+        src.stage(plan, np.array([i]))
+    with pytest.raises(ValueError, match="50 bytes"):
+        src.finish()
+
+
+def test_sequential_source_long_stream_rejected():
+    src = SequentialBlockSource(iter([b"a" * 100, b"b" * 10]), 100)
+    plan = plan_blocks(100, beta=80, overlap=8)
+    for i in range(plan.num_blocks):
+        src.stage(plan, np.array([i]))
+    with pytest.raises(ValueError, match="110 bytes"):
+        src.finish()
+
+
+# ---- property: frames round-trip any bytes at any frame size -----------------
+
+def test_frames_property_roundtrip():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.binary(min_size=0, max_size=5000),
+           st.integers(min_value=1, max_value=700))
+    def prop(data, frame_beta):
+        stream = compress_frames(data, get_codec("zlib"),
+                                 frame_beta=frame_beta)
+        assert bytes(decompress_frames(stream, len(data),
+                                       get_codec("zlib"))) == data
+
+    prop()

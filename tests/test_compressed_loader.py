@@ -1,0 +1,416 @@
+"""Compressed inputs through every loading path: engine x codec CSR
+parity vs the ``csr_np`` oracle (deterministic matrix + hypothesis
+property suite), compressed ``.gvel`` v2 round-trips, v1 back-compat,
+and the corruption matrix routed through the loader front door."""
+import gzip
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core import (codecs, load_csr, load_edgelist, read_snapshot,
+                        save_snapshot, write_framed)
+from repro.core.build import csr_np
+from repro.core.csr import convert_to_csr
+from repro.core.generate import write_edgelist
+from repro.core.snapshot import SnapshotError, VERSION, VERSION_COMPRESSED
+
+HOST_ENGINES = ["numpy", "threads"]
+DEVICE_ENGINES = ["device", "pallas"]
+# same staging shapes as test_loader.py, so jitted programs are reused
+# across tests; framed files force beta to their frame size, so the
+# frame_beta below must match the engine's beta
+SMALL_KW = {"device": dict(beta=4096, batch_blocks=2),
+            "pallas": dict(beta=2048, batch_blocks=2)}
+FRAME_BETA = {"device": 4096, "pallas": 2048}
+
+FORMATS = ["raw", "gzip", "framed-zlib", "framed-zstd"]
+
+
+def _graph(tmp_path, *, weighted, base, seed=0, v=60, e=400):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, v, e)
+    dst = rng.integers(0, v, e)
+    w = (rng.random(e) * 9).round(3).astype(np.float32) if weighted else None
+    path = str(tmp_path / f"g_{weighted}_{base}.el")
+    write_edgelist(path, src, dst, w, base=base)
+    oracle = csr_np(src.astype(np.int32), dst.astype(np.int32), w, v)
+    return path, v, e, oracle
+
+
+def _compressed(path, fmt, frame_beta=4096):
+    """Materialize ``path`` in the given format; returns the new path."""
+    if fmt == "raw":
+        return path
+    raw = open(path, "rb").read()
+    if fmt == "gzip":
+        out = path + ".gz"
+        with open(out, "wb") as f:
+            f.write(gzip.compress(raw))
+        return out
+    codec = fmt.split("-")[1]
+    if codec == "zstd":
+        pytest.importorskip("zstandard")
+    out = path + f".{codec}.elz"
+    write_framed(out, raw, codec=codec, frame_beta=frame_beta)
+    return out
+
+
+def _assert_rows_match(csr, oracle, v, *, weighted):
+    assert np.array_equal(np.asarray(csr.offsets, np.int64),
+                          np.asarray(oracle.offsets))
+    off = np.asarray(oracle.offsets)
+    for u in range(v):
+        mine = np.sort(np.asarray(csr.targets[off[u]:off[u + 1]]))
+        ref = np.sort(np.asarray(oracle.targets[off[u]:off[u + 1]]))
+        assert np.array_equal(mine, ref), u
+    if weighted:
+        for u in range(v):
+            mine = sorted(zip(
+                np.asarray(csr.targets[off[u]:off[u + 1]]).tolist(),
+                np.round(np.asarray(csr.weights[off[u]:off[u + 1]]), 3).tolist()))
+            ref = sorted(zip(
+                np.asarray(oracle.targets[off[u]:off[u + 1]]).tolist(),
+                np.round(np.asarray(oracle.weights[off[u]:off[u + 1]]), 3).tolist()))
+            assert mine == ref, u
+
+
+# ---- engine x codec parity matrix -------------------------------------------
+
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("engine", HOST_ENGINES)
+@pytest.mark.parametrize("weighted,base", [(False, 1), (False, 0),
+                                           (True, 1), (True, 0)])
+def test_host_engines_compressed_parity(tmp_path, engine, fmt, weighted, base):
+    path, v, e, oracle = _graph(tmp_path, weighted=weighted, base=base,
+                                seed=base + 2 * weighted)
+    cpath = _compressed(path, fmt)
+    csr = load_csr(cpath, engine=engine, weighted=weighted, base=base,
+                   num_vertices=v)
+    _assert_rows_match(csr, oracle, v, weighted=weighted)
+    el = load_edgelist(cpath, engine=engine, weighted=weighted, base=base)
+    assert int(el.num_edges) == e
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("engine", DEVICE_ENGINES)
+@pytest.mark.parametrize("weighted,base", [(False, 1), (True, 0)])
+def test_streaming_engines_compressed_parity(tmp_path, engine, fmt, weighted,
+                                             base):
+    """The fused device path over compressed inputs: decompression runs
+    in the prefetch thread, frames map 1:1 onto staging blocks."""
+    path, v, e, oracle = _graph(tmp_path, weighted=weighted, base=base,
+                                seed=base + 2 * weighted)
+    cpath = _compressed(path, fmt, frame_beta=FRAME_BETA[engine])
+    csr = load_csr(cpath, engine=engine, weighted=weighted, base=base,
+                   num_vertices=v, **SMALL_KW[engine])
+    _assert_rows_match(csr, oracle, v, weighted=weighted)
+
+
+@pytest.mark.parametrize("fmt", ["gzip", "framed-zlib"])
+@pytest.mark.parametrize("engine", ["numpy", "device"])
+def test_empty_compressed_file(tmp_path, engine, fmt):
+    path = str(tmp_path / "empty.el")
+    open(path, "w").close()
+    cpath = _compressed(path, fmt)
+    el = load_edgelist(cpath, engine=engine)
+    assert int(el.num_edges) == 0
+    csr = load_csr(cpath, engine=engine)
+    assert np.asarray(csr.offsets).tolist() == [0]
+
+
+def test_offset_applies_after_decompression(tmp_path):
+    """MTX-style body offsets are in uncompressed coordinates."""
+    header = "9999 9999 9999\n"
+    path = str(tmp_path / "hdr.el")
+    with open(path, "w") as f:
+        f.write(header + "1 2\n3 4\n")
+    for fmt in ("gzip", "framed-zlib"):
+        cpath = _compressed(path, fmt, frame_beta=4096)
+        for engine, kw in (("numpy", {}), ("device", SMALL_KW["device"])):
+            el = load_edgelist(cpath, engine=engine, offset=len(header), **kw)
+            n = int(el.num_edges)
+            assert n == 2, (fmt, engine)
+            assert sorted(np.asarray(el.src[:n]).tolist()) == [0, 2]
+
+
+# ---- property suite: random messy edgelists, all engines x codecs -----------
+
+def test_property_parity_across_engines_and_codecs(tmp_path):
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    edges_st = st.lists(
+        st.tuples(st.integers(0, 199), st.integers(0, 199),
+                  st.floats(min_value=0, max_value=99,
+                            allow_nan=False).map(lambda x: round(x, 2))),
+        min_size=0, max_size=80)
+
+    def render(edges, *, weighted, base, seed):
+        """Messy but parseable text: mixed separators, CRLF line ends,
+        comment lines, blank lines, trailing garbage."""
+        rng = np.random.default_rng(seed)
+        lines = []
+        for u, v, w in edges:
+            sep = [" ", "\t", "  "][rng.integers(0, 3)]
+            line = f"{u + base}{sep}{v + base}"
+            if weighted:
+                line += f"{sep}{w}"
+            if rng.random() < 0.2:
+                line += "\r"                     # CRLF
+            lines.append(line)
+            if rng.random() < 0.1:
+                lines.append("# a comment line")
+            if rng.random() < 0.1:
+                lines.append("")
+        if rng.random() < 0.5:
+            lines.append("trailing garbage!")
+        return ("\n".join(lines) + "\n").encode()
+
+    counter = [0]
+
+    @settings(max_examples=12, deadline=None)
+    @given(edges=edges_st, weighted=st.booleans(), base=st.integers(0, 1))
+    def prop(edges, weighted, base):
+        counter[0] += 1
+        v = 200
+        src = np.array([u for u, _, _ in edges], np.int32)
+        dst = np.array([d for _, d, _ in edges], np.int32)
+        w = (np.array([x for _, _, x in edges], np.float32)
+             if weighted else None)
+        oracle = csr_np(src, dst, w, v)
+        text = render(edges, weighted=weighted, base=base, seed=len(edges))
+        path = str(tmp_path / f"p{counter[0]}.el")
+        with open(path, "wb") as f:
+            f.write(text)
+        for fmt in FORMATS:
+            if fmt == "framed-zstd" and "zstd" not in codecs.available_codecs():
+                continue
+            cpath = _compressed(path, fmt, frame_beta=4096)
+            for engine, kw in (("numpy", {}), ("threads", {}),
+                               ("device", SMALL_KW["device"])):
+                csr = load_csr(cpath, engine=engine, weighted=weighted,
+                               base=base, num_vertices=v, **kw)
+                _assert_rows_match(csr, oracle, v, weighted=weighted)
+
+    prop()
+
+
+# ---- compressed .gvel v2 -----------------------------------------------------
+
+def _codec_params():
+    return ["zlib", pytest.param("zstd", marks=pytest.mark.skipif(
+        "zstd" not in codecs.available_codecs(),
+        reason="zstandard not installed"))]
+
+
+@pytest.mark.parametrize("codec", _codec_params())
+@pytest.mark.parametrize("weighted", [False, True])
+def test_compressed_snapshot_prebuilt_csr_exact(tmp_path, codec, weighted):
+    path, v, e, oracle = _graph(tmp_path, weighted=weighted, base=1, seed=3)
+    el = load_edgelist(path, engine="numpy", weighted=weighted,
+                       num_vertices=v)
+    gv = str(tmp_path / "g.z.gvel")
+    save_snapshot(gv, edgelist=el, csr=convert_to_csr(el, engine="numpy"),
+                  compress=codec, frame_beta=2048)
+    snap = read_snapshot(gv)
+    assert snap.version == VERSION_COMPRESSED
+    csr = load_csr(gv, weighted=weighted)        # front door autodetects
+    assert np.array_equal(np.asarray(csr.offsets, np.int64),
+                          np.asarray(oracle.offsets))
+    assert np.array_equal(np.asarray(csr.targets), np.asarray(oracle.targets))
+    if weighted:
+        assert np.allclose(np.asarray(csr.weights), np.asarray(oracle.weights))
+
+
+def test_compressed_snapshot_edgelist_only_fused_build(tmp_path):
+    path, v, e, oracle = _graph(tmp_path, weighted=False, base=1, seed=8)
+    el = load_edgelist(path, engine="numpy", num_vertices=v)
+    gv = str(tmp_path / "g.el.z.gvel")
+    save_snapshot(gv, edgelist=el, compress="zlib")
+    csr = load_csr(gv)
+    _assert_rows_match(csr, oracle, v, weighted=False)
+    el2 = load_edgelist(gv)
+    n = int(el2.num_edges)
+    assert np.array_equal(np.asarray(el2.src[:n]), np.asarray(el.src))
+
+
+def test_uncompressed_save_still_writes_v1(tmp_path):
+    """Forward/backward compat: no compression -> a version-1 file any
+    pre-v2 reader can load."""
+    path, v, e, _ = _graph(tmp_path, weighted=False, base=1, seed=2)
+    el = load_edgelist(path, engine="numpy", num_vertices=v)
+    gv = str(tmp_path / "g.gvel")
+    save_snapshot(gv, edgelist=el)
+    assert read_snapshot(gv).version == VERSION
+
+
+def test_handwritten_v1_file_still_loads(tmp_path):
+    """A minimal v1 file written with raw struct calls (the format-spec
+    worked example) loads unchanged under the v2-aware reader."""
+    src = np.array([0, 1, 2], "<i4")
+    dst = np.array([1, 2, 0], "<i4")
+    sections = [(1, 1, src), (2, 1, dst)]
+    table, off = [], 40 + 24 * len(sections)
+    for sid, code, arr in sections:
+        off = -(-off // 4096) * 4096
+        table.append((sid, code, off, arr.nbytes))
+        off += arr.nbytes
+    gv = str(tmp_path / "tiny.gvel")
+    with open(gv, "wb") as f:
+        f.write(struct.pack("<8sIIQQII", b"GVELSNAP", 1, 0b010, 3, 3,
+                            len(sections), 0))
+        for entry in table:
+            f.write(struct.pack("<IIQQ", *entry))
+        for (sid, code, arr), (_, _, soff, _) in zip(sections, table):
+            f.seek(soff)
+            f.write(arr.tobytes())
+        f.truncate(off)
+    el = load_edgelist(gv)
+    assert int(el.num_edges) == 3
+    assert np.asarray(el.src[:3]).tolist() == [0, 1, 2]
+
+
+def test_compressed_snapshot_smaller_on_repetitive_data(tmp_path):
+    """The point of the feature: compressible graphs shrink on disk."""
+    v, e = 100, 20000
+    src = np.arange(e, dtype=np.int64) % v       # highly regular
+    dst = (np.arange(e, dtype=np.int64) + 1) % v
+    path = str(tmp_path / "reg.el")
+    write_edgelist(path, src, dst, base=1)
+    el = load_edgelist(path, engine="numpy", num_vertices=v)
+    raw_gv = str(tmp_path / "reg.gvel")
+    z_gv = str(tmp_path / "reg.z.gvel")
+    save_snapshot(raw_gv, edgelist=el)
+    save_snapshot(z_gv, edgelist=el, compress="zlib")
+    assert os.path.getsize(z_gv) < os.path.getsize(raw_gv)
+
+
+# ---- corruption matrix through the loader ------------------------------------
+
+def test_truncated_framed_input_rejected(tmp_path):
+    path, v, e, _ = _graph(tmp_path, weighted=False, base=1, seed=4)
+    cpath = _compressed(path, "framed-zlib", frame_beta=1024)
+    with open(cpath, "r+b") as f:
+        f.truncate(os.path.getsize(cpath) - 9)
+    with pytest.raises(ValueError, match="truncated"):
+        load_csr(cpath, engine="numpy", num_vertices=v)
+    with pytest.raises(ValueError, match="truncated"):
+        load_csr(cpath, engine="device", num_vertices=v,
+                 **SMALL_KW["device"])
+
+
+def test_bitflipped_framed_input_rejected(tmp_path):
+    path, v, e, _ = _graph(tmp_path, weighted=False, base=1, seed=4)
+    cpath = _compressed(path, "framed-zlib", frame_beta=1024)
+    with open(cpath, "r+b") as f:
+        f.seek(codecs.FRAMED_HDR_LEN + codecs.FRAME_HDR_LEN + 20)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0x10]))
+    with pytest.raises(ValueError):
+        load_csr(cpath, engine="numpy", num_vertices=v)
+
+
+def test_truncated_gzip_input_rejected(tmp_path):
+    path, v, e, _ = _graph(tmp_path, weighted=False, base=1, seed=4)
+    cpath = _compressed(path, "gzip")
+    with open(cpath, "r+b") as f:
+        f.truncate(os.path.getsize(cpath) // 2)
+    with pytest.raises(ValueError, match="gzip"):
+        load_csr(cpath, engine="numpy", num_vertices=v)
+
+
+def test_multimember_gzip_streaming_rejected_host_ok(tmp_path):
+    """Multi-member gzip lies about its uncompressed length (ISIZE is
+    the last member only): the streaming engine must refuse rather than
+    drop edges; the host engines decompress fully and succeed."""
+    path, v, e, oracle = _graph(tmp_path, weighted=False, base=1, seed=6)
+    raw = open(path, "rb").read()
+    half = raw.rfind(b"\n", 0, len(raw) // 2) + 1
+    cpath = path + ".gz"
+    with open(cpath, "wb") as f:
+        f.write(gzip.compress(raw[:half]) + gzip.compress(raw[half:]))
+    csr = load_csr(cpath, engine="numpy", num_vertices=v)
+    _assert_rows_match(csr, oracle, v, weighted=False)
+    with pytest.raises(ValueError, match="multi-member"):
+        load_csr(cpath, engine="device", num_vertices=v, **SMALL_KW["device"])
+
+
+def test_corrupt_compressed_snapshot_rejected(tmp_path):
+    path, v, e, _ = _graph(tmp_path, weighted=False, base=1, seed=5)
+    el = load_edgelist(path, engine="numpy", num_vertices=v)
+    gv = str(tmp_path / "g.z.gvel")
+    save_snapshot(gv, edgelist=el, compress="zlib")
+    # bit-flip inside the first section's compressed payload
+    with open(gv, "r+b") as f:
+        f.seek(4096 + 30)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0x20]))
+    with pytest.raises(SnapshotError):
+        read_snapshot(gv)
+    with pytest.raises(SnapshotError):
+        load_csr(gv)
+
+
+def test_unknown_codec_id_in_snapshot_rejected(tmp_path):
+    path, v, e, _ = _graph(tmp_path, weighted=False, base=1, seed=5)
+    el = load_edgelist(path, engine="numpy", num_vertices=v)
+    gv = str(tmp_path / "g.z.gvel")
+    save_snapshot(gv, edgelist=el, compress="zlib")
+    # first v2 table entry: sid u32, dtype u32, offset u64, nbytes u64,
+    # codec_id u32 at entry offset 24
+    with open(gv, "r+b") as f:
+        f.seek(40 + 24)
+        f.write(struct.pack("<I", 99))
+    with pytest.raises(SnapshotError, match="unknown codec id 99"):
+        read_snapshot(gv)
+
+
+def test_truncated_compressed_snapshot_rejected(tmp_path):
+    path, v, e, _ = _graph(tmp_path, weighted=False, base=1, seed=5)
+    el = load_edgelist(path, engine="numpy", num_vertices=v)
+    gv = str(tmp_path / "g.z.gvel")
+    save_snapshot(gv, edgelist=el, compress="zlib")
+    with open(gv, "r+b") as f:
+        f.truncate(os.path.getsize(gv) - 11)
+    with pytest.raises(SnapshotError, match="truncated"):
+        read_snapshot(gv)
+
+
+def test_externally_compressed_snapshot_clear_error(tmp_path):
+    path, v, e, _ = _graph(tmp_path, weighted=False, base=1, seed=5)
+    el = load_edgelist(path, engine="numpy", num_vertices=v)
+    gv = str(tmp_path / "g.gvel")
+    save_snapshot(gv, edgelist=el)
+    gz = gv + ".gz"
+    with open(gz, "wb") as f:
+        f.write(gzip.compress(open(gv, "rb").read()))
+    with pytest.raises(ValueError, match="compressed .gvel"):
+        load_csr(gz)
+    with pytest.raises(ValueError, match="--compress"):
+        load_edgelist(gz)
+
+
+# ---- compressed MTX ----------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", ["gzip", "framed-zlib"])
+def test_compressed_mtx_roundtrip(tmp_path, fmt):
+    from repro.core import mtx_to_snapshot, read_mtx, write_mtx
+
+    rng = np.random.default_rng(7)
+    v, e = 40, 200
+    src, dst = rng.integers(0, v, e), rng.integers(0, v, e)
+    m = str(tmp_path / "m.mtx")
+    write_mtx(m, src, dst, num_vertices=v)
+    mz = _compressed(m, fmt, frame_beta=512)
+    el = read_mtx(mz)
+    assert int(el.num_edges) == e and el.num_vertices == v
+    gv = str(tmp_path / "m.gvel")
+    mtx_to_snapshot(mz, gv, compress="zlib")
+    snap = read_snapshot(gv)
+    assert snap.version == VERSION_COMPRESSED and snap.num_edges == e
+    oracle = csr_np(src.astype(np.int32), dst.astype(np.int32), None, v)
+    _assert_rows_match(load_csr(gv), oracle, v, weighted=False)

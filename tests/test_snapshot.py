@@ -175,10 +175,11 @@ def test_bad_magic_rejected(tmp_path):
 
 
 def test_version_mismatch_rejected(tmp_path):
+    # version 2 is now supported (compressed sections); 99 is not
     gv = _valid_snapshot(tmp_path)
     with open(gv, "r+b") as f:
         f.seek(len(MAGIC))
-        f.write(struct.pack("<I", VERSION + 1))
+        f.write(struct.pack("<I", 99))
     with pytest.raises(SnapshotError, match="version"):
         read_snapshot(gv)
 
