@@ -21,11 +21,23 @@ streaming engine, zlib-framed ``.gvel`` v2 sections in the snapshot
 engine).  Each row's ``mb=`` field is its input's size on disk, so the
 ratio/throughput trade-off is measured, not asserted.
 
+The lazy rows measure what the ``GraphSource`` front door buys on a
+*both-sections* compressed snapshot: the old eager reader
+(``read_snapshot(path)``) decompresses and checksums the edgelist AND
+CSR sections at open, while ``open_graph(path).csr()`` decodes only
+the CSR sections (per-section lazy decompression, this PR's ROADMAP
+item).
+
 ``--quick`` (used by scripts/verify.sh) runs the same pipeline on a
 small graph with repeat=1 so the benchmark code itself cannot rot
-unexecuted.
+unexecuted.  ``--json OUT.json`` additionally writes machine-readable
+rows ``{name, seconds, mb, speedup}`` — ``mb`` is the input's size on
+disk and ``speedup`` is this row's gain over the batch-roundtrip
+baseline row (baseline = 1.0) — so the perf trajectory is diffable
+across PRs.
 """
 import gzip
+import json
 import os
 import sys
 
@@ -109,10 +121,8 @@ def _mb(path):
     return f"mb={os.path.getsize(path) / 1e6:.2f}"
 
 
-def run(quick: bool = False):
-    from repro.core import load_csr
-
-    from repro.core import get_engine
+def run(quick: bool = False, json_path: str = None):
+    from repro.core import get_engine, open_graph, read_snapshot
 
     path, v, e = dataset("quick_rmat" if quick else "web_rmat")
     repeat = 1 if quick else 3
@@ -122,41 +132,69 @@ def run(quick: bool = False):
 
     def cold(p, **kw):
         # measure a fresh open (validation + any decompression), not a
-        # hit on the engine's stat-validated in-process memo
+        # hit on the engine's stat-validated in-process memo; every row
+        # goes through the GraphSource front door
         snap_eng.clear_memo()
-        return load_csr(p, engine="snapshot", num_vertices=v, **kw)
+        return open_graph(p, engine="snapshot", num_vertices=v).csr(**kw)
+
+    def stream_csr(p):
+        return open_graph(p, engine="device",
+                          num_vertices=v).csr(method="staged")
+
+    def eager_zsnap_csr():
+        # the pre-GraphSource contract: read_snapshot() decompresses and
+        # checksums EVERY section at open, edgelist included
+        snap_eng.clear_memo()
+        return read_snapshot(zsnap).csr()
 
     t_old = timeit(lambda: _batch_roundtrip_csr(path, v), repeat=repeat)
-    t_new = timeit(lambda: load_csr(path, engine="device", num_vertices=v,
-                                    method="staged"), repeat=repeat)
+    t_new = timeit(lambda: stream_csr(path), repeat=repeat)
     t_sel = timeit(lambda: cold(el_snap, method="staged"), repeat=repeat)
     t_scsr = timeit(lambda: cold(csr_snap), repeat=repeat)
-    t_gz = timeit(lambda: load_csr(gz, engine="device", num_vertices=v,
-                                   method="staged"), repeat=repeat)
-    t_fz = timeit(lambda: load_csr(fz, engine="device", num_vertices=v,
-                                   method="staged"), repeat=repeat)
-    t_zsnap = timeit(lambda: cold(zsnap), repeat=repeat)
-    emit("e2e.load_csr_batch_roundtrip", t_old,
-         f"edges_per_s={e / t_old:.3e};{_mb(path)}")
-    emit("e2e.load_csr_streaming", t_new,
-         f"edges_per_s={e / t_new:.3e};speedup={t_old / t_new:.2f}x;"
-         f"{_mb(path)}")
-    emit("e2e.load_csr_snapshot_el", t_sel,
-         f"edges_per_s={e / t_sel:.3e};vs_streaming={t_new / t_sel:.2f}x;"
-         f"{_mb(el_snap)}")
-    emit("e2e.load_csr_snapshot_csr", t_scsr,
-         f"edges_per_s={e / t_scsr:.3e};vs_streaming={t_new / t_scsr:.2f}x;"
-         f"{_mb(csr_snap)}")
-    emit("e2e.load_csr_text_gz", t_gz,
-         f"edges_per_s={e / t_gz:.3e};vs_raw_text={t_new / t_gz:.2f}x;"
-         f"{_mb(gz)}")
-    emit("e2e.load_csr_text_framed_zlib", t_fz,
-         f"edges_per_s={e / t_fz:.3e};vs_raw_text={t_new / t_fz:.2f}x;"
-         f"{_mb(fz)}")
-    emit("e2e.load_csr_snapshot_csr_zlib", t_zsnap,
-         f"edges_per_s={e / t_zsnap:.3e};vs_raw_snapshot="
-         f"{t_scsr / t_zsnap:.2f}x;{_mb(zsnap)}")
+    t_gz = timeit(lambda: stream_csr(gz), repeat=repeat)
+    t_fz = timeit(lambda: stream_csr(fz), repeat=repeat)
+    t_zeager = timeit(eager_zsnap_csr, repeat=repeat)
+    t_zlazy = timeit(lambda: cold(zsnap), repeat=repeat)
+
+    rows = []
+
+    def row(name, seconds, in_path, derived=""):
+        emit(name, seconds, derived + (";" if derived else "") + _mb(in_path))
+        rows.append({"name": name, "seconds": round(seconds, 6),
+                     "mb": round(os.path.getsize(in_path) / 1e6, 3),
+                     "speedup": round(t_old / seconds, 2)})
+
+    row("e2e.load_csr_batch_roundtrip", t_old, path,
+        f"edges_per_s={e / t_old:.3e}")
+    row("e2e.load_csr_streaming", t_new, path,
+        f"edges_per_s={e / t_new:.3e};speedup={t_old / t_new:.2f}x")
+    row("e2e.load_csr_snapshot_el", t_sel, el_snap,
+        f"edges_per_s={e / t_sel:.3e};vs_streaming={t_new / t_sel:.2f}x")
+    row("e2e.load_csr_snapshot_csr", t_scsr, csr_snap,
+        f"edges_per_s={e / t_scsr:.3e};vs_streaming={t_new / t_scsr:.2f}x")
+    row("e2e.load_csr_text_gz", t_gz, gz,
+        f"edges_per_s={e / t_gz:.3e};vs_raw_text={t_new / t_gz:.2f}x")
+    row("e2e.load_csr_text_framed_zlib", t_fz, fz,
+        f"edges_per_s={e / t_fz:.3e};vs_raw_text={t_new / t_fz:.2f}x")
+    # both-sections compressed snapshot, cold .csr(): eager decodes the
+    # edgelist frames it never serves, lazy decodes CSR sections only
+    row("e2e.load_csr_snapshot_zlib_eager", t_zeager, zsnap,
+        f"edges_per_s={e / t_zeager:.3e}")
+    row("e2e.load_csr_snapshot_zlib_lazy", t_zlazy, zsnap,
+        f"edges_per_s={e / t_zlazy:.3e};vs_eager={t_zeager / t_zlazy:.2f}x")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=2)
+            f.write("\n")
 
 
 if __name__ == "__main__":
-    run(quick="--quick" in sys.argv[1:])
+    argv = sys.argv[1:]
+    out = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            sys.exit("usage: python -m benchmarks.e2e_load_csr "
+                     "[--quick] [--json OUT.json]")
+        out = argv[i + 1]
+    run(quick="--quick" in argv, json_path=out)

@@ -2,16 +2,20 @@
 """Convert a text edgelist or MatrixMarket file to a ``.gvel`` snapshot.
 
 GVEL's "write once, load many": pay the text parse once here, then every
-``load_edgelist``/``load_csr`` on the output is a zero-parse mmap (and,
-with the default embedded CSR, ``load_csr`` skips the build entirely).
+load on the output is a zero-parse mmap (and, with the default embedded
+CSR, ``open_graph(out).csr()`` skips the build entirely).
 
   PYTHONPATH=src python scripts/convert.py graph.el graph.gvel
   PYTHONPATH=src python scripts/convert.py --weighted --base 0 g.el g.gvel
   PYTHONPATH=src python scripts/convert.py matrix.mtx matrix.gvel
 
-MTX inputs are detected by their banner; field/symmetry attributes are
-honored (the snapshot stores the resolved graph).  See
-docs/snapshot-format.md for the container spec.
+A thin shell over the :class:`repro.core.source.GraphSource` API:
+``open_graph(input, ...).save(output, ...)``.  Formats are sniffed by
+magic (MTX banner through gzip/framed compression too); MTX
+field/symmetry attributes are honored — the snapshot stores the
+resolved graph.  See docs/snapshot-format.md for the container spec and
+docs/api.md for the API.  Refuses to overwrite an existing output
+unless ``--force`` is given.
 """
 from __future__ import annotations
 
@@ -21,12 +25,6 @@ import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-
-def _is_mtx(path: str) -> bool:
-    # sniff through gzip/framed compression so matrix.mtx.gz converts too
-    from repro.core.codecs import peek_bytes
-    return peek_bytes(path, 14) == b"%%MatrixMarket"
 
 
 def main(argv=None) -> int:
@@ -59,55 +57,60 @@ def main(argv=None) -> int:
                     help="store sections compressed (.gvel v2): zlib always, "
                     "zstd when the zstandard package is installed; e.g. "
                     "--compress zlib or --compress zstd:9")
+    ap.add_argument("--force", action="store_true",
+                    help="overwrite an existing output file")
     args = ap.parse_args(argv)
 
-    from repro.core import (convert_to_csr, load_edgelist, mtx_to_snapshot,
-                            read_snapshot, save_snapshot)
-    from repro.core.codecs import parse_codec_spec
-    from repro.core.loader import csr_convert_engine
+    if os.path.exists(args.output) and not args.force:
+        print(f"error: refusing to overwrite existing {args.output} "
+              f"(pass --force to replace it)", file=sys.stderr)
+        return 2
 
-    codec_name = level = None
-    if args.compress is not None:
-        codec, level = parse_codec_spec(args.compress)
-        codec_name = codec.name
+    from repro.core import open_graph
 
-    t0 = time.perf_counter()
-    if _is_mtx(args.input):
-        ignored = [name for name, off_default in
-                   [("--weighted", not args.weighted),
-                    ("--symmetric", not args.symmetric),
-                    ("--base", args.base == 1),
-                    ("--num-vertices", args.num_vertices is None)]
-                   if not off_default]
-        if ignored:
-            print(f"warning: {', '.join(ignored)} ignored for MTX input — "
-                  f"field/symmetry/base/|V| come from the MTX header",
-                  file=sys.stderr)
-        mtx_to_snapshot(args.input, args.output, engine=args.engine,
-                        csr=not args.no_csr, method=args.method, rho=args.rho,
-                        compress=codec_name, compress_level=level)
-    else:
-        el = load_edgelist(args.input, engine=args.engine,
-                           weighted=args.weighted, symmetric=args.symmetric,
-                           base=args.base, num_vertices=args.num_vertices)
-        csr = None
-        if not args.no_csr:
-            csr = convert_to_csr(el, method=args.method, rho=args.rho,
-                                 engine=csr_convert_engine(args.engine))
-        save_snapshot(args.output, edgelist=el, csr=csr,
-                      compress=codec_name, compress_level=level)
-    t_convert = time.perf_counter() - t0
+    try:
+        t0 = time.perf_counter()
+        # format probe only (validate=False: the real open below, with
+        # the engine pinned, does the header validation once)
+        src = open_graph(args.input, validate=False)
+        if src.format == "mtx":
+            ignored = [name for name, off_default in
+                       [("--weighted", not args.weighted),
+                        ("--symmetric", not args.symmetric),
+                        ("--base", args.base == 1),
+                        ("--num-vertices", args.num_vertices is None)]
+                       if not off_default]
+            if ignored:
+                print(f"warning: {', '.join(ignored)} ignored for MTX input "
+                      f"— field/symmetry/base/|V| come from the MTX header",
+                      file=sys.stderr)
+            src = open_graph(args.input, engine=args.engine)
+        else:
+            src = open_graph(args.input, engine=args.engine,
+                             weighted=args.weighted,
+                             symmetric=args.symmetric, base=args.base,
+                             num_vertices=args.num_vertices)
+        out = src.save(args.output, compress=args.compress,
+                       csr=not args.no_csr, method=args.method, rho=args.rho)
+        # eager re-read of what we just wrote: decompress + CRC-check
+        # every section now, not lazily at some consumer's first access
+        from repro.core import read_snapshot
+        read_snapshot(args.output)
+        t_convert = time.perf_counter() - t0
+    except (OSError, ValueError) as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 1
 
-    snap = read_snapshot(args.output)
+    info = out.info()
     in_sz = os.path.getsize(args.input)
-    out_sz = os.path.getsize(args.output)
-    comp = f" codec={codec_name}" if codec_name else ""
+    comp = f" codec={info.codec}" if info.codec else ""
     print(f"{args.input} ({in_sz / 1e6:.2f} MB) -> {args.output} "
-          f"({out_sz / 1e6:.2f} MB, {out_sz / max(in_sz, 1):.2f}x input)"
+          f"({info.size_bytes / 1e6:.2f} MB, "
+          f"{info.size_bytes / max(in_sz, 1):.2f}x input)"
           f"{comp} in {t_convert * 1e3:.0f} ms")
-    print(f"  |V|={snap.num_vertices:,} |E|={snap.num_edges:,} v{snap.version} "
-          f"weighted={snap.weighted} edgelist={snap.has_edgelist} "
-          f"csr={snap.has_csr}")
+    print(f"  |V|={info.num_vertices:,} |E|={info.num_edges:,} "
+          f"v{info.version} weighted={info.weighted} "
+          f"edgelist={info.has_edgelist} csr={info.has_csr}")
     return 0
 
 

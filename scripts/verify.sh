@@ -47,8 +47,18 @@ check(gvz)
 print("snapshot smoke: convert.py round-trip OK (raw + zlib .gvel v2)")
 PY
 
-# benchmark smoke: the e2e loader benchmark (incl. compressed rows) must
-# still execute end to end — benchmark code can't rot unexecuted
-python -m benchmarks.e2e_load_csr --quick
+# benchmark smoke: the e2e loader benchmark (incl. compressed + lazy
+# rows) must still execute end to end — benchmark code can't rot
+# unexecuted.  --json emits machine-readable {name, seconds, mb,
+# speedup} rows; BENCH_e2e.json committed from a full (non-quick) run
+# is the cross-PR perf trajectory.
+python -m benchmarks.e2e_load_csr --quick --json /tmp/BENCH_e2e_quick.json
+python - <<'PY'
+import json
+rows = json.load(open("/tmp/BENCH_e2e_quick.json"))
+assert rows and all(set(r) == {"name", "seconds", "mb", "speedup"}
+                    for r in rows), rows
+print(f"benchmark json: {len(rows)} rows OK")
+PY
 
 echo "verify: all green"

@@ -1,9 +1,15 @@
 """GVEL core: fast graph loading in Edgelist and CSR formats, in JAX.
 
 Public API:
-    load_edgelist, load_csr              — unified front door; pick a parse
-                                           engine by name (device | pallas |
-                                           numpy | threads | snapshot)
+    open_graph -> GraphSource            — THE front door: a lazy,
+                                           introspectable handle; .info() /
+                                           .edgelist() / .csr() / .stream() /
+                                           .save() (see docs/api.md)
+    LoadOptions, SourceInfo              — normalized option / metadata types
+    load_edgelist, load_csr              — thin wrappers over a GraphSource;
+                                           pick a parse engine by name
+                                           (device | pallas | numpy |
+                                           threads | snapshot)
     register_engine, available_engines   — the loader extension point
     save_snapshot, read_snapshot         — binary .gvel snapshots (zero-parse
                                            reload; see docs/snapshot-format.md)
@@ -17,7 +23,8 @@ Public API:
 """
 from .types import CSR, EdgeList, GraphMeta
 from .loader import (load_edgelist, load_csr, register_engine, get_engine,
-                     available_engines, LoaderEngine)
+                     available_engines, LoaderEngine, LoadOptions)
+from .source import open_graph, GraphSource, SourceInfo
 from .edgelist import read_edgelist, read_edgelist_numpy, symmetrize
 from .csr import convert_to_csr, read_csr, csr_to_dense
 from .mtx import read_mtx, read_mtx_csr, write_mtx, mtx_to_snapshot
@@ -27,10 +34,11 @@ from .codecs import (register_codec, get_codec, available_codecs,
 from .generate import make_graph_file, rmat_edges, uniform_edges, grid_edges, write_edgelist
 from .distributed import load_csr_sharded, host_shard_and_load
 from . import (baselines, build, codecs, compat, degrees, loader, parse,
-               parse_np, blocks, snapshot)
+               parse_np, blocks, snapshot, source)
 
 __all__ = [
     "CSR", "EdgeList", "GraphMeta",
+    "open_graph", "GraphSource", "SourceInfo", "LoadOptions",
     "load_edgelist", "load_csr", "register_engine", "get_engine",
     "available_engines", "LoaderEngine",
     "save_snapshot", "read_snapshot", "Snapshot", "SnapshotError",
@@ -43,5 +51,5 @@ __all__ = [
     "write_edgelist",
     "load_csr_sharded", "host_shard_and_load",
     "baselines", "build", "codecs", "compat", "degrees", "loader", "parse",
-    "parse_np", "blocks", "snapshot",
+    "parse_np", "blocks", "snapshot", "source",
 ]

@@ -1,8 +1,13 @@
-"""Unified streaming loader: one front door for every parse engine.
+"""Unified streaming loader: the engine registry and engine-call layer.
 
-This module is the single entry point for getting a graph file into
-memory — ``load_edgelist`` (file -> EdgeList) and ``load_csr``
-(file -> CSR) — with the parse backend selected by name from a registry:
+The user-facing front door is :mod:`repro.core.source` —
+``open_graph(path) -> GraphSource`` — which resolves format/codec/
+engine once and serves lazy, memoized products.  This module keeps the
+layer underneath it: the engine registry, the normalized
+:class:`LoadOptions` every engine call is expanded from, the streaming
+pipeline, and the historical ``load_edgelist`` (file -> EdgeList) /
+``load_csr`` (file -> CSR) wrappers, with the parse backend selected by
+name from the registry:
 
     ==========  ================================================
     engine      implementation
@@ -42,9 +47,11 @@ edge set; symmetrization happens once, in the front door.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
+from typing import (Any, Callable, Dict, Optional, Protocol, Tuple,
+                    runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +63,72 @@ from .parse import parse_blocks
 from .types import CSR, EdgeList
 
 I32 = jnp.int32
+
+# the per-product engine defaults the wrappers have always used: host
+# EdgeLists parse fastest on the numpy engine; CSR builds run fused on
+# the streaming device engine
+DEFAULT_EDGELIST_ENGINE = "numpy"
+DEFAULT_CSR_ENGINE = "device"
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadOptions:
+    """The normalized loading knobs, consolidated from the kwargs that
+    used to be scattered across every ``load_*``/``read_*`` signature.
+
+    One instance travels from the front door (:func:`repro.core.source.
+    open_graph` / a ``GraphSource``) down to every engine call — the
+    expansion helpers below are the *only* place option names map onto
+    engine-call keywords, so an engine can never see a half-normalized
+    set.
+
+    ``engine=None`` means "per-product default" (``numpy`` for
+    edgelists, ``device`` for CSRs); ``weighted=None`` means "what the
+    file says" (snapshot flags / MTX banner; plain text has no header,
+    so it resolves to False).  ``engine_kw`` carries engine tuning
+    knobs (``beta``, ``batch_blocks``, ``num_workers``, ...) verbatim.
+    """
+
+    engine: Optional[str] = None
+    weighted: Optional[bool] = None
+    symmetric: bool = False
+    base: int = 1
+    num_vertices: Optional[int] = None
+    offset: int = 0
+    engine_kw: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    _OWN_FIELDS = ("engine", "weighted", "symmetric", "base",
+                   "num_vertices", "offset")
+
+    def __post_init__(self):
+        if self.base not in (0, 1):
+            raise ValueError(f"base must be 0 or 1, got {self.base!r}")
+        if self.offset < 0:
+            raise ValueError(f"offset must be >= 0, got {self.offset!r}")
+        dup = sorted(set(self.engine_kw) & set(self._OWN_FIELDS))
+        if dup:
+            raise ValueError(f"option(s) {dup} passed both named and via "
+                             f"engine_kw")
+
+    def replace(self, **changes) -> "LoadOptions":
+        return dataclasses.replace(self, **changes)
+
+    def read_kwargs(self) -> Dict[str, Any]:
+        """Keywords for an engine's ``read_edgelist``."""
+        return dict(self.engine_kw, weighted=bool(self.weighted),
+                    base=self.base, num_vertices=self.num_vertices,
+                    offset=self.offset)
+
+    def stream_kwargs(self) -> Dict[str, Any]:
+        """Keywords for an engine's ``stream`` (no ``num_vertices`` —
+        streams infer or take the front door's hint)."""
+        return dict(self.engine_kw, weighted=bool(self.weighted),
+                    base=self.base, offset=self.offset)
+
+    def prebuilt_kwargs(self) -> Dict[str, Any]:
+        """Keywords for an engine's ``read_csr_prebuilt``."""
+        return dict(self.engine_kw, weighted=bool(self.weighted),
+                    num_vertices=self.num_vertices, offset=self.offset)
 
 # (src, dst, weights-or-None, num_edges device scalar) — packed device
 # buffers with -1 padding past num_edges; the streaming engines' output.
@@ -281,103 +354,46 @@ def _register_builtin_engines() -> None:
     register_engine(snapshot.SnapshotEngine())
 
 
-def _resolve_engine(path: str, engine: str, offset: int) -> str:
-    """Route ``.gvel`` files (by magic sniff, not extension) to the
-    snapshot engine: a text parser pointed at a binary snapshot would
-    silently decode garbage.  ``offset != 0`` means the caller is
-    reading a body embedded in another format (MTX), never a snapshot;
-    unreadable/missing paths fall through so non-file engines keep
-    working.
-    """
-    if engine != "snapshot" and offset == 0:
-        from .snapshot import is_snapshot
-        if is_snapshot(path):
-            return "snapshot"
-        from .codecs import compression_of, peek_bytes
-        if compression_of(path) is not None:
-            from .snapshot import MAGIC
-            if peek_bytes(path, len(MAGIC)) == MAGIC:
-                # A whole-file-compressed snapshot would decode as text
-                # garbage; .gvel v2 compresses *inside* the container.
-                raise ValueError(
-                    f"{path}: externally compressed .gvel snapshot; "
-                    f"decompress it, or recreate it with internal section "
-                    f"compression (scripts/convert.py --compress)")
-    return engine
-
-
 # ---------------------------------------------------------------------------
-# front door
+# engine-call implementations (shared by GraphSource and the wrappers)
 # ---------------------------------------------------------------------------
 
-def load_edgelist(
-    path: str,
-    *,
-    engine: str = "numpy",
-    weighted: bool = False,
-    symmetric: bool = False,
-    base: int = 1,
-    num_vertices: Optional[int] = None,
-    offset: int = 0,
-    **engine_kw,
-) -> EdgeList:
-    """File -> EdgeList through the named engine.
-
-    ``offset`` skips a header prefix (MTX bodies); ``engine_kw`` is
-    forwarded to the engine (beta/batch_blocks for device, num_workers
-    for threads, chunk_bytes for numpy, ...).  Binary ``.gvel`` files
-    are detected by magic and routed to the snapshot engine.
-    """
-    engine = _resolve_engine(path, engine, offset)
-    el = get_engine(engine).read_edgelist(
-        path, weighted=weighted, base=base, num_vertices=num_vertices,
-        offset=offset, **engine_kw)
-    if symmetric:
+def read_edgelist_via(path: str, opts: LoadOptions) -> EdgeList:
+    """File -> EdgeList through ``opts.engine`` (must be concrete).
+    Symmetrization happens here, once — engines return the raw edge
+    set (the engine contract, docs/extending.md)."""
+    el = get_engine(opts.engine).read_edgelist(path, **opts.read_kwargs())
+    if opts.symmetric:
         from .edgelist import symmetrize
         el = symmetrize(el)
     return el
 
 
-def load_csr(
-    path: str,
-    *,
-    engine: str = "device",
-    weighted: bool = False,
-    symmetric: bool = False,
-    base: int = 1,
-    num_vertices: Optional[int] = None,
-    method: str = "staged",
-    rho: int = 4,
-    offset: int = 0,
-    **engine_kw,
-) -> CSR:
-    """File -> CSR through the named engine.
+def read_csr_via(path: str, opts: LoadOptions, *, method: str = "staged",
+                 rho: int = 4,
+                 fallback_edgelist: Optional[Callable[[], EdgeList]] = None,
+                 ) -> CSR:
+    """File -> CSR through ``opts.engine`` (must be concrete).
 
-    Streaming engines (device, pallas) run fused: packed device edge
-    buffers feed ``csr_global``/``csr_staged`` directly — no host
-    EdgeList in between.  Host engines read an EdgeList and convert.
-    Symmetric graphs take the EdgeList route (reverse-edge expansion is
-    a host concatenation today).
-
-    Binary ``.gvel`` files are detected by magic and routed to the
-    snapshot engine.  Engines exposing ``read_csr_prebuilt`` (snapshot)
-    are probed first: a snapshot with an embedded CSR is served straight
-    from mmap'd views — no parse *and* no build (``method``/``rho`` do
-    not apply; the stored CSR wins).
+    Probes the engine's optional fast paths in speedup order:
+    ``read_csr_prebuilt`` (no parse, no build), then ``stream`` (fused
+    device build, no host EdgeList), then the EdgeList + convert route.
+    ``fallback_edgelist`` lets a :class:`~repro.core.source.GraphSource`
+    feed its memoized edgelist into that last route instead of
+    re-reading the file.  Symmetric graphs always take the EdgeList
+    route (reverse-edge expansion is a host concatenation today).
     """
-    engine = _resolve_engine(path, engine, offset)
-    eng = get_engine(engine)
-    if hasattr(eng, "read_csr_prebuilt") and not symmetric:
-        csr = eng.read_csr_prebuilt(path, weighted=weighted,
-                                    num_vertices=num_vertices, offset=offset,
-                                    **engine_kw)
+    weighted = bool(opts.weighted)
+    eng = get_engine(opts.engine)
+    if hasattr(eng, "read_csr_prebuilt") and not opts.symmetric:
+        csr = eng.read_csr_prebuilt(path, **opts.prebuilt_kwargs())
         if csr is not None:
             return csr
-    if hasattr(eng, "stream") and not symmetric:
+    if hasattr(eng, "stream") and not opts.symmetric:
+        num_vertices = opts.num_vertices
         if num_vertices is None and hasattr(eng, "num_vertices_hint"):
             num_vertices = eng.num_vertices_hint(path)
-        (src, dst, w, total), _cap = eng.stream(
-            path, weighted=weighted, base=base, offset=offset, **engine_kw)
+        (src, dst, w, total), _cap = eng.stream(path, **opts.stream_kwargs())
         n = int(total)
         if num_vertices is None:
             num_vertices = _device_num_vertices(src, dst) if n else 0
@@ -402,11 +418,72 @@ def load_csr(
                    np.asarray(ww[:n]) if weighted else None,
                    num_vertices)
     from .csr import convert_to_csr
-    el = load_edgelist(path, engine=engine, weighted=weighted,
-                       symmetric=symmetric, base=base,
-                       num_vertices=num_vertices, offset=offset, **engine_kw)
+    el = (fallback_edgelist() if fallback_edgelist is not None
+          else read_edgelist_via(path, opts))
     return convert_to_csr(el, method=method, rho=rho,
-                          engine=csr_convert_engine(engine))
+                          engine=csr_convert_engine(opts.engine))
+
+
+# ---------------------------------------------------------------------------
+# front door (thin wrappers over repro.core.source.open_graph)
+# ---------------------------------------------------------------------------
+
+def load_edgelist(
+    path: str,
+    *,
+    engine: str = DEFAULT_EDGELIST_ENGINE,
+    weighted: bool = False,
+    symmetric: bool = False,
+    base: int = 1,
+    num_vertices: Optional[int] = None,
+    offset: int = 0,
+    **engine_kw,
+) -> EdgeList:
+    """File -> EdgeList through the named engine.
+
+    A thin wrapper over the :class:`~repro.core.source.GraphSource`
+    front door — equivalent to ``open_graph(path, ...).edgelist()``.
+    ``offset`` skips a header prefix (MTX bodies); ``engine_kw`` is
+    forwarded to the engine (beta/batch_blocks for device, num_workers
+    for threads, chunk_bytes for numpy, ...).  Binary ``.gvel`` files
+    are detected by magic and routed to the snapshot engine.
+    """
+    from .source import open_graph
+    return open_graph(path, engine=engine, weighted=weighted,
+                      symmetric=symmetric, base=base,
+                      num_vertices=num_vertices, offset=offset,
+                      validate=False, **engine_kw).edgelist()
+
+
+def load_csr(
+    path: str,
+    *,
+    engine: str = DEFAULT_CSR_ENGINE,
+    weighted: bool = False,
+    symmetric: bool = False,
+    base: int = 1,
+    num_vertices: Optional[int] = None,
+    method: str = "staged",
+    rho: int = 4,
+    offset: int = 0,
+    **engine_kw,
+) -> CSR:
+    """File -> CSR through the named engine.
+
+    A thin wrapper over the :class:`~repro.core.source.GraphSource`
+    front door — equivalent to ``open_graph(path, ...).csr(...)``.
+    Streaming engines (device, pallas) run fused: packed device edge
+    buffers feed ``csr_global``/``csr_staged`` directly — no host
+    EdgeList in between.  Host engines read an EdgeList and convert.
+    Binary ``.gvel`` files are detected by magic and routed to the
+    snapshot engine; an embedded prebuilt CSR is served straight from
+    mmap (``method``/``rho`` do not apply — the stored CSR wins).
+    """
+    from .source import open_graph
+    return open_graph(path, engine=engine, weighted=weighted,
+                      symmetric=symmetric, base=base,
+                      num_vertices=num_vertices, offset=offset,
+                      validate=False, **engine_kw).csr(method=method, rho=rho)
 
 
 _register_builtin_engines()

@@ -78,10 +78,10 @@ def _read_body(path: str, hdr: MtxHeader, engine: str, **kw) -> EdgeList:
     return el
 
 
-def read_mtx(path: str, *, engine: str = "numpy") -> EdgeList:
+def read_mtx(path: str, *, engine: str = "numpy", **engine_kw) -> EdgeList:
     """Read an MTX file to an EdgeList, honoring field/symmetry."""
     hdr = read_header(path)
-    el = _read_body(path, hdr, engine)
+    el = _read_body(path, hdr, engine, **engine_kw)
     if int(el.num_edges) != hdr.meta.num_edges:
         raise ValueError(
             f"{path}: parsed {int(el.num_edges)} entries, header says "
@@ -118,19 +118,18 @@ def mtx_to_snapshot(path: str, out_path: str, *, engine: str = "numpy",
     with no MTX-specific handling at all.  With ``csr=True`` (default)
     a prebuilt CSR is embedded, making ``load_csr(out_path)`` a pure
     mmap.  Returns the source header's :class:`GraphMeta`.
-    """
-    from .loader import csr_convert_engine
-    from .snapshot import save_snapshot
 
-    hdr = read_header(path)
-    el = read_mtx(path, engine=engine)
-    csr_obj = None
-    if csr:
-        csr_obj = convert_to_csr(el, method=method, rho=rho,
-                                 engine=csr_convert_engine(engine))
-    save_snapshot(out_path, edgelist=el, csr=csr_obj, compress=compress,
-                  compress_level=compress_level)
-    return hdr.meta
+    A thin wrapper over ``open_graph(path).save(out_path, ...)`` — the
+    :class:`~repro.core.source.GraphSource` write path.
+    """
+    from .source import open_graph
+
+    src = open_graph(path, engine=engine)
+    if src.format != "mtx":
+        raise ValueError(f"{path}: missing MatrixMarket banner")
+    src.save(out_path, csr=csr, method=method, rho=rho, compress=compress,
+             compress_level=compress_level)
+    return src._mtx_header().meta
 
 
 def write_mtx(path: str, src, dst, weights=None, *, num_vertices: int,

@@ -29,8 +29,12 @@ Layout (all integers little-endian; byte-level spec in
 
 Every section starts on a 4096-byte (page) boundary so an mmap'd reader
 hands out aligned, typed, read-only views with no copying and no
-parsing.  Vertex ids in a snapshot are canonical **0-based** regardless
-of the base of the text file it was converted from.
+parsing.  Compressed v2 section payloads decode **lazily, per
+section**: a both-sections snapshot opened for its prebuilt CSR never
+decompresses its edgelist frames (``read_snapshot(path, eager=False)``;
+the default ``eager=True`` keeps the historical decompress-at-open
+contract).  Vertex ids in a snapshot are canonical **0-based**
+regardless of the base of the text file it was converted from.
 
 Readers must reject unknown versions and truncated files, and must
 *ignore* unknown section ids (that is how the format grows without a
@@ -43,7 +47,6 @@ into the loader registry: ``read_edgelist`` returns mmap-backed views,
 """
 from __future__ import annotations
 
-import dataclasses
 import os
 import struct
 from typing import List, Optional, Tuple
@@ -132,6 +135,38 @@ def peek_header(path: str) -> Tuple[int, int, int, int, int]:
     if reserved != 0:
         raise SnapshotError(f"{path}: nonzero reserved header field")
     return version, flags, v, e, count
+
+
+def peek_table(path: str):
+    """Header + section-table metadata without touching payload bytes:
+    ``(version, flags, V, E, entries)`` where each entry is
+    ``(sid, dtype_code, offset, nbytes, codec_id, raw_nbytes)``.
+
+    The cheap introspection primitive behind ``GraphSource.info()`` —
+    reads ``HEADER_LEN + count * entry_len`` bytes, nothing else."""
+    version, flags, v, e, count = peek_header(path)
+    v2 = version == VERSION_COMPRESSED
+    entry_fmt = SECTION_FMT_V2 if v2 else SECTION_FMT
+    entry_len = SECTION_LEN_V2 if v2 else SECTION_LEN
+    table_len = count * entry_len
+    with open(path, "rb") as f:
+        f.seek(HEADER_LEN)
+        raw = f.read(table_len)
+    if len(raw) < table_len:
+        raise SnapshotError(
+            f"{path}: truncated section table "
+            f"({HEADER_LEN + len(raw)} < {HEADER_LEN + table_len} bytes)")
+    entries = []
+    for i in range(count):
+        if v2:
+            sid, code, off, nbytes, codec_id, _rsvd, raw_nbytes = \
+                struct.unpack_from(entry_fmt, raw, i * entry_len)
+        else:
+            sid, code, off, nbytes = struct.unpack_from(entry_fmt, raw,
+                                                        i * entry_len)
+            codec_id, raw_nbytes = 0, nbytes
+        entries.append((sid, code, off, nbytes, codec_id, raw_nbytes))
+    return version, flags, v, e, entries
 
 
 # ---------------------------------------------------------------------------
@@ -264,29 +299,138 @@ def save_snapshot(
 # reader
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass(frozen=True)
-class Snapshot:
-    """A validated, mmap-backed view of a ``.gvel`` file.
+class _Section:
+    """One section's payload cell.
 
-    For v1 files (and uncompressed v2 sections) the array fields are
-    read-only numpy views straight into the page cache — no bytes are
-    copied or parsed at load time.  Compressed v2 sections are
-    decompressed and checksummed at read time into read-only in-memory
-    arrays (see :func:`read_snapshot`).
+    Uncompressed sections are materialized at table-parse time as
+    zero-copy mmap views (the mmap itself is lazy — the kernel pages
+    bytes in on first touch).  Compressed sections hold only their frame
+    stream's byte range; :meth:`get` decodes (and CRC-checks) the
+    payload on first access and memoizes the result, so a section the
+    caller never touches is never decompressed — and corruption in it
+    is never noticed (the deferred-error trade documented in
+    ``docs/api.md``).
     """
 
-    path: str
-    version: int
-    flags: int
-    num_vertices: int
-    num_edges: int
-    src: Optional[np.ndarray]
-    dst: Optional[np.ndarray]
-    edge_weights: Optional[np.ndarray]
-    csr_offsets: Optional[np.ndarray]
-    csr_indices: Optional[np.ndarray]
-    csr_weights: Optional[np.ndarray]
+    __slots__ = ("path", "sid", "dtype", "offset", "nbytes", "codec",
+                 "raw_nbytes", "_data", "_arr")
 
+    def __init__(self, path, sid, dtype, offset, nbytes, codec,
+                 raw_nbytes, data):
+        self.path = path
+        self.sid = sid
+        self.dtype = dtype
+        self.offset = offset
+        self.nbytes = nbytes
+        self.codec = codec               # None = stored (codec_id 0)
+        self.raw_nbytes = raw_nbytes
+        self._data = data
+        self._arr = (data[offset:offset + nbytes].view(dtype)
+                     if codec is None else None)
+
+    @property
+    def length(self) -> int:
+        """Element count, known from the table alone (no payload)."""
+        return self.raw_nbytes // self.dtype.itemsize
+
+    @property
+    def decoded(self) -> bool:
+        return self._arr is not None
+
+    def get(self) -> np.ndarray:
+        if self._arr is None:
+            # dynamic attribute lookup so tests can instrument the
+            # decode path (repro.core.codecs.decompress_frames)
+            from . import codecs
+            try:
+                arr = codecs.decompress_frames(
+                    self._data[self.offset:self.offset + self.nbytes],
+                    self.raw_nbytes, self.codec,
+                    context=f"{self.path} section {self.sid}")
+            except ValueError as exc:
+                raise SnapshotError(str(exc)) from None
+            arr.flags.writeable = False  # parity with the mmap views
+            self._arr = arr.view(self.dtype)
+        return self._arr
+
+
+class Snapshot:
+    """A validated, mmap-backed handle on a ``.gvel`` file.
+
+    Structure (header, section table, section presence and lengths) is
+    validated at open without touching any payload bytes.  Payload
+    access is **lazy per section**: v1 / uncompressed sections are
+    zero-copy views straight into the page cache, compressed v2
+    sections are decompressed — and checksummed — on first access of
+    the corresponding property (``src``/``dst``/``edge_weights``/
+    ``csr_offsets``/``csr_indices``/``csr_weights``) and memoized.
+    Touching only the CSR properties of a both-sections snapshot never
+    decodes the edgelist frame streams (and vice versa).
+
+    The trade: corruption inside a compressed payload surfaces at first
+    access of *that section* (as :class:`SnapshotError`), not at open.
+    Call :meth:`materialize` — or use ``read_snapshot(path)``, which is
+    eager by default — to force every checksum up front.
+    """
+
+    def __init__(self, path: str, version: int, flags: int,
+                 num_vertices: int, num_edges: int,
+                 sections: "dict[int, _Section]"):
+        self.path = path
+        self.version = version
+        self.flags = flags
+        self.num_vertices = num_vertices
+        self.num_edges = num_edges
+        self._sections = sections
+
+    def _get(self, sid: int) -> Optional[np.ndarray]:
+        cell = self._sections.get(sid)
+        if cell is None:
+            return None
+        first = not cell.decoded
+        arr = cell.get()
+        if first and sid == SEC_CSR_OFFSETS:
+            try:
+                self._check_csr_offsets(arr)
+            except SnapshotError:
+                # stay fatal on retry: a memoized-but-inconsistent array
+                # must never be served by the next access
+                cell._arr = None
+                raise
+        return arr
+
+    def _check_csr_offsets(self, arr: np.ndarray) -> None:
+        if arr.shape[0] and int(arr[-1]) != self.num_edges:
+            raise SnapshotError(
+                f"{self.path}: csr offsets end at {int(arr[-1])}, "
+                f"header says {self.num_edges} edges")
+
+    # lazy payload properties ------------------------------------------------
+    @property
+    def src(self) -> Optional[np.ndarray]:
+        return self._get(SEC_SRC)
+
+    @property
+    def dst(self) -> Optional[np.ndarray]:
+        return self._get(SEC_DST)
+
+    @property
+    def edge_weights(self) -> Optional[np.ndarray]:
+        return self._get(SEC_EDGE_WEIGHTS)
+
+    @property
+    def csr_offsets(self) -> Optional[np.ndarray]:
+        return self._get(SEC_CSR_OFFSETS)
+
+    @property
+    def csr_indices(self) -> Optional[np.ndarray]:
+        return self._get(SEC_CSR_INDICES)
+
+    @property
+    def csr_weights(self) -> Optional[np.ndarray]:
+        return self._get(SEC_CSR_WEIGHTS)
+
+    # ------------------------------------------------------------------------
     @property
     def weighted(self) -> bool:
         return bool(self.flags & FLAG_WEIGHTED)
@@ -298,6 +442,25 @@ class Snapshot:
     @property
     def has_csr(self) -> bool:
         return bool(self.flags & FLAG_CSR)
+
+    def decoded_sections(self) -> "list[int]":
+        """Section ids whose payloads have been materialized (for
+        uncompressed sections that is every present id — views cost
+        nothing).  Instrumentation hook for tests and benchmarks."""
+        return sorted(sid for sid, c in self._sections.items() if c.decoded)
+
+    def section_codecs(self) -> "list[str]":
+        """Distinct codec names used by compressed sections."""
+        return sorted({c.codec.name for c in self._sections.values()
+                       if c.codec is not None})
+
+    def materialize(self) -> "Snapshot":
+        """Force-decode (and checksum) every section; returns self.
+        After this, corruption anywhere in the file has either raised
+        or cannot exist — the eager ``read_snapshot`` contract."""
+        for sid in sorted(self._sections):
+            self._get(sid)
+        return self
 
     def edgelist(self) -> EdgeList:
         if not self.has_edgelist:
@@ -313,16 +476,19 @@ class Snapshot:
                    self.num_vertices)
 
 
-def read_snapshot(path: str) -> Snapshot:
-    """mmap + validate a ``.gvel`` file; returns typed zero-copy views
-    (v1 / uncompressed sections) or decompressed arrays (v2 compressed
-    sections).
+def read_snapshot(path: str, *, eager: bool = True) -> Snapshot:
+    """mmap + validate a ``.gvel`` file.
 
-    Compressed sections are decompressed — and therefore checksummed —
-    *eagerly*, so corruption surfaces here, at open, never later from a
-    served array.  That means opening a snapshot with both an edgelist
-    and a CSR decompresses both even if the caller only wants one;
-    lazy per-section decompression is an open item (ROADMAP.md).
+    Structure — header, table, section presence, and element counts —
+    is always validated here, *without* reading payload bytes (counts
+    come from the table's ``raw_nbytes``).  With ``eager=True`` (the
+    default, and the historical contract) every compressed section is
+    also decompressed and checksummed before returning, so corruption
+    anywhere surfaces at open.  With ``eager=False`` the returned
+    :class:`Snapshot` decodes each compressed section on first access
+    instead — a both-sections snapshot opened for its prebuilt CSR
+    never pays for its edgelist frames (the ``GraphSource`` lazy path;
+    see ``docs/api.md`` for the deferred-corruption-error semantics).
     """
     version, flags, num_vertices, num_edges, count = peek_header(path)
     size = os.path.getsize(path)
@@ -336,7 +502,7 @@ def read_snapshot(path: str) -> Snapshot:
     data = mmap_bytes(path)
     raw = data[HEADER_LEN:table_end].tobytes()
 
-    views = {}
+    cells: dict = {}
     for i in range(count):
         if v2:
             sid, code, off, nbytes, codec_id, rsvd, raw_nbytes = \
@@ -370,46 +536,42 @@ def read_snapshot(path: str) -> Snapshot:
                 raise SnapshotError(
                     f"{path}: uncompressed section {sid} declares "
                     f"{raw_nbytes} raw bytes but stores {nbytes}")
-            views[sid] = data[off:off + nbytes].view(dtype)
+            codec = None
         else:
-            # compressed section: decompress the checksummed frame stream
-            # (corruption raises, never silently-wrong arrays)
+            # the codec must resolve at open (it is table metadata, not
+            # payload) — a file needing an uninstalled codec fails fast
             from . import codecs
             try:
                 codec = codecs.codec_for_id(codec_id)
-                arr = codecs.decompress_frames(
-                    data[off:off + nbytes], raw_nbytes, codec,
-                    context=f"{path} section {sid}")
             except ValueError as exc:
-                raise SnapshotError(str(exc)) from None
-            arr.flags.writeable = False     # parity with the mmap views
-            views[sid] = arr.view(dtype)
+                raise SnapshotError(f"{path}: section {sid}: {exc}") from None
+        cells[sid] = _Section(path, sid, dtype, off, nbytes, codec,
+                              raw_nbytes, data)
 
-    def expect(sid: int, name: str, length: int) -> np.ndarray:
-        arr = views.get(sid)
-        if arr is None:
+    def expect(sid: int, name: str, length: int) -> None:
+        cell = cells.get(sid)
+        if cell is None:
             raise SnapshotError(f"{path}: flagged {name} section missing")
-        if arr.shape[0] != length:
-            raise SnapshotError(f"{path}: {name} has {arr.shape[0]} elements, "
+        if cell.length != length:
+            raise SnapshotError(f"{path}: {name} has {cell.length} elements, "
                                 f"header implies {length}")
-        return arr
 
-    src = dst = ew = co = ci = cw = None
     if flags & FLAG_EDGELIST:
-        src = expect(SEC_SRC, "src", num_edges)
-        dst = expect(SEC_DST, "dst", num_edges)
+        expect(SEC_SRC, "src", num_edges)
+        expect(SEC_DST, "dst", num_edges)
         if flags & FLAG_WEIGHTED:
-            ew = expect(SEC_EDGE_WEIGHTS, "edge-weights", num_edges)
+            expect(SEC_EDGE_WEIGHTS, "edge-weights", num_edges)
     if flags & FLAG_CSR:
-        co = expect(SEC_CSR_OFFSETS, "csr-offsets", num_vertices + 1)
-        ci = expect(SEC_CSR_INDICES, "csr-indices", num_edges)
-        if int(co[-1]) != num_edges:
-            raise SnapshotError(f"{path}: csr offsets end at {int(co[-1])}, "
-                                f"header says {num_edges} edges")
+        expect(SEC_CSR_OFFSETS, "csr-offsets", num_vertices + 1)
+        expect(SEC_CSR_INDICES, "csr-indices", num_edges)
         if flags & FLAG_WEIGHTED:
-            cw = expect(SEC_CSR_WEIGHTS, "csr-weights", num_edges)
-    return Snapshot(path, version, flags, num_vertices, num_edges,
-                    src, dst, ew, co, ci, cw)
+            expect(SEC_CSR_WEIGHTS, "csr-weights", num_edges)
+    snap = Snapshot(path, version, flags, num_vertices, num_edges, cells)
+    if flags & FLAG_CSR and cells[SEC_CSR_OFFSETS].decoded:
+        # uncompressed offsets are views already — check them at open,
+        # exactly as the eager reader always did
+        snap._check_csr_offsets(cells[SEC_CSR_OFFSETS].get())
+    return snap.materialize() if eager else snap
 
 
 # ---------------------------------------------------------------------------
@@ -433,20 +595,22 @@ class SnapshotEngine:
         """One open + validation per file per ``load_csr`` call: the
         front door probes ``read_csr_prebuilt`` / ``num_vertices_hint``
         / ``stream`` in sequence, so memoize on (path, mtime, size).
-        A stale entry only costs a re-read.  For v1 snapshots the memo
-        pins one mmap (views are zero-copy); for compressed v2
-        snapshots it pins the last-loaded file's *decompressed* section
-        arrays until the next load — call :meth:`clear_memo` to release
-        them early.  The (key, value) pair is written as one tuple so
-        concurrent loads of different files race only on which entry
-        survives, never on a mixed key/value.
+        A stale entry only costs a re-read.  Snapshots are opened
+        *lazily* (``eager=False``): compressed v2 sections decode on
+        first access, so serving a prebuilt CSR from a both-sections
+        snapshot never decompresses its edgelist frames.  The memo pins
+        one mmap plus whatever sections have been decoded so far —
+        call :meth:`clear_memo` to release them early.  The (key,
+        value) pair is written as one tuple so concurrent loads of
+        different files race only on which entry survives, never on a
+        mixed key/value.
         """
         st = os.stat(path)
         key = (path, st.st_mtime_ns, st.st_size)
         memo = self._memo
         if memo is not None and memo[0] == key:
             return memo[1]
-        snap = read_snapshot(path)
+        snap = read_snapshot(path, eager=False)
         self._memo = (key, snap)
         return snap
 
@@ -469,10 +633,14 @@ class SnapshotEngine:
                       offset: int = 0, **kw) -> EdgeList:
         snap = self._snap(path)
         self._check(snap, weighted=weighted, offset=offset)
-        el = snap.edgelist()
-        w = el.weights if weighted else None
-        v = el.num_vertices if num_vertices is None else num_vertices
-        return EdgeList(el.src, el.dst, w, el.num_edges, v)
+        if not snap.has_edgelist:
+            raise SnapshotError(f"{snap.path}: CSR-only snapshot has no "
+                                f"edgelist sections")
+        # touch only what the caller asked for: an unweighted read of a
+        # weighted compressed snapshot never decodes the weights section
+        w = snap.edge_weights if weighted else None
+        v = snap.num_vertices if num_vertices is None else num_vertices
+        return EdgeList(snap.src, snap.dst, w, np.int64(snap.num_edges), v)
 
     def num_vertices_hint(self, path: str) -> int:
         """Header-only |V| — lets the fused ``load_csr`` keep isolated
@@ -498,10 +666,12 @@ class SnapshotEngine:
                 f"{path}: {snap.num_edges} edges exceeds int32 for the fused "
                 f"load_csr path; embed a prebuilt CSR in the snapshot "
                 f"(scripts/convert.py default) or use load_edgelist")
-        el = snap.edgelist()
-        src = jnp.asarray(el.src)
-        dst = jnp.asarray(el.dst)
-        w = jnp.asarray(el.weights) if weighted else None
+        if not snap.has_edgelist:
+            raise SnapshotError(f"{snap.path}: CSR-only snapshot has no "
+                                f"edgelist sections")
+        src = jnp.asarray(snap.src)
+        dst = jnp.asarray(snap.dst)
+        w = jnp.asarray(snap.edge_weights) if weighted else None
         total = jnp.asarray(snap.num_edges, jnp.int32)
         return (src, dst, w, total), snap.num_edges
 
@@ -520,6 +690,9 @@ class SnapshotEngine:
             return None
         if num_vertices is not None and num_vertices != snap.num_vertices:
             return None
-        csr = snap.csr()
-        return CSR(csr.offsets, csr.targets,
-                   csr.weights if weighted else None, csr.num_vertices)
+        # section-selective: only the CSR cells decode (never the
+        # edgelist frames of a both-sections snapshot), and the weights
+        # section only when the caller asked for weights
+        return CSR(snap.csr_offsets, snap.csr_indices,
+                   snap.csr_weights if weighted else None,
+                   snap.num_vertices)

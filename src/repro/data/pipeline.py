@@ -5,9 +5,10 @@ runs step n, a background thread builds (and device_puts) batch n+1, so
 input never serializes with compute.  Step-indexed sources keep restart
 deterministic.
 
-``graph_walk_source`` is the bridge from the unified loader
-(:mod:`repro.core.loader`) into this pipeline: graph file -> CSR through
-a named engine -> step-indexed walk-batch source for :class:`Prefetcher`.
+``graph_walk_source`` is the bridge from the loading front door
+(:func:`repro.core.source.open_graph`) into this pipeline: graph file
+-> ``GraphSource`` -> CSR through a named engine -> step-indexed
+walk-batch source for :class:`Prefetcher`.
 """
 from __future__ import annotations
 
@@ -21,17 +22,20 @@ import jax
 def graph_walk_source(path: str, cfg, batch: int, seq: int, *,
                       engine: str = "device",
                       **load_kw) -> Callable[[int], dict]:
-    """Load a graph through ``loader.load_csr(engine=...)`` and return a
+    """Load a graph through ``open_graph(path).csr()`` and return a
     deterministic step-indexed source of random-walk LM batches.
 
     The returned callable feeds :class:`Prefetcher` directly, completing
     the streamed path: file -> packed device edges -> CSR -> walk batches,
     with the loader and the batch pipeline double-buffering at both ends.
     """
-    from ..core.loader import load_csr
+    from ..core.source import open_graph
     from .walks import walk_batch
 
-    csr = load_csr(path, engine=engine, **load_kw)
+    method = load_kw.pop("method", "staged")
+    rho = load_kw.pop("rho", 4)
+    csr = open_graph(path, engine=engine, **load_kw).csr(method=method,
+                                                         rho=rho)
 
     def source(step: int) -> dict:
         return walk_batch(csr, cfg, batch, seq, step)

@@ -1,0 +1,131 @@
+"""scripts/convert.py CLI: the text/mtx x compression x weighted
+argument matrix (outputs verified against the ``csr_np`` oracle),
+plus the error paths — unreadable input, unknown engine, bad codec
+spec, and overwrite refusal."""
+import importlib.util
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import open_graph
+from repro.core.build import csr_np
+from repro.core.generate import write_edgelist
+from repro.core.mtx import write_mtx
+
+_CONVERT = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                        "convert.py")
+_spec = importlib.util.spec_from_file_location("convert_cli", _CONVERT)
+convert_cli = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(convert_cli)
+
+
+def _inputs(tmp_path, informat, weighted, seed=0, v=40, e=200):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, v, e)
+    dst = rng.integers(0, v, e)
+    w = ((rng.random(e) * 9).round(3).astype(np.float32) if weighted
+         else None)
+    if informat == "text":
+        path = str(tmp_path / "g.el")
+        write_edgelist(path, src, dst, w, base=1)
+    else:
+        path = str(tmp_path / "g.mtx")
+        write_mtx(path, src, dst, w, num_vertices=v)
+    oracle = csr_np(src.astype(np.int32), dst.astype(np.int32), w, v)
+    return path, v, e, oracle
+
+
+# ---- argument matrix ---------------------------------------------------------
+
+@pytest.mark.parametrize("informat", ["text", "mtx"])
+@pytest.mark.parametrize("compress", [None, "zlib"])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_convert_matrix(tmp_path, informat, compress, weighted):
+    path, v, e, oracle = _inputs(tmp_path, informat, weighted,
+                                 seed=2 * weighted + (compress is not None))
+    out = str(tmp_path / "g.gvel")
+    args = [path, out]
+    if informat == "text":
+        args += ["--num-vertices", str(v)]
+        if weighted:
+            args.append("--weighted")
+    if compress:
+        args += ["--compress", compress]
+    assert convert_cli.main(args) == 0
+
+    res = open_graph(out)
+    info = res.info()
+    assert info.format == "gvel"
+    assert info.version == (2 if compress else 1)
+    assert info.codec == compress
+    assert info.num_vertices == v and info.num_edges == e
+    assert info.weighted == weighted
+    assert info.has_edgelist and info.has_csr
+    csr = res.csr()
+    assert np.array_equal(np.asarray(csr.offsets, np.int64),
+                          np.asarray(oracle.offsets))
+    off = np.asarray(oracle.offsets)
+    for u in range(v):
+        mine = np.sort(np.asarray(csr.targets[off[u]:off[u + 1]]))
+        ref = np.sort(np.asarray(oracle.targets[off[u]:off[u + 1]]))
+        assert np.array_equal(mine, ref), u
+
+
+def test_convert_mtx_warns_about_ignored_text_flags(tmp_path, capsys):
+    path, v, e, _ = _inputs(tmp_path, "mtx", weighted=False)
+    out = str(tmp_path / "g.gvel")
+    assert convert_cli.main([path, out, "--weighted", "--base", "0"]) == 0
+    err = capsys.readouterr().err
+    assert "--weighted" in err and "--base" in err and "ignored" in err
+
+
+def test_convert_no_csr_and_level_spec(tmp_path):
+    path, v, e, _ = _inputs(tmp_path, "text", weighted=False)
+    out = str(tmp_path / "g.gvel")
+    assert convert_cli.main([path, out, "--num-vertices", str(v),
+                             "--no-csr", "--compress", "zlib:9"]) == 0
+    info = open_graph(out).info()
+    assert info.has_edgelist and not info.has_csr
+    assert info.codec == "zlib" and info.version == 2
+
+
+# ---- error paths -------------------------------------------------------------
+
+def test_convert_unreadable_input(tmp_path, capsys):
+    rc = convert_cli.main([str(tmp_path / "missing.el"),
+                           str(tmp_path / "out.gvel")])
+    assert rc == 1
+    assert "error:" in capsys.readouterr().err
+    assert not os.path.exists(str(tmp_path / "out.gvel"))
+
+
+def test_convert_refuses_overwrite_without_force(tmp_path, capsys):
+    path, v, e, _ = _inputs(tmp_path, "text", weighted=False)
+    out = str(tmp_path / "g.gvel")
+    assert convert_cli.main([path, out, "--num-vertices", str(v)]) == 0
+    before = open(out, "rb").read()
+    rc = convert_cli.main([path, out, "--num-vertices", str(v)])
+    assert rc == 2
+    assert "refusing to overwrite" in capsys.readouterr().err
+    assert open(out, "rb").read() == before          # untouched
+    assert convert_cli.main([path, out, "--num-vertices", str(v),
+                             "--force", "--compress", "zlib"]) == 0
+    assert open_graph(out).info().version == 2       # really replaced
+
+
+def test_convert_unknown_engine_lists_available(tmp_path, capsys):
+    path, v, e, _ = _inputs(tmp_path, "text", weighted=False)
+    rc = convert_cli.main([path, str(tmp_path / "o.gvel"),
+                           "--engine", "no-such-engine"])
+    assert rc == 1
+    err = capsys.readouterr().err
+    assert "unknown loader engine" in err and "numpy" in err
+
+
+def test_convert_bad_codec_spec(tmp_path, capsys):
+    path, v, e, _ = _inputs(tmp_path, "text", weighted=False)
+    rc = convert_cli.main([path, str(tmp_path / "o.gvel"),
+                           "--compress", "zlib:notanint"])
+    assert rc == 1
+    assert "codec level" in capsys.readouterr().err
