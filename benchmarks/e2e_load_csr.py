@@ -2,11 +2,18 @@
 batch round-trip pipeline vs binary snapshots, same input.
 
 The baseline below reproduces the pre-loader device path verbatim:
-synchronous block staging, jitted parse, a device->host copy of every
-batch, ``np.concatenate``, a host EdgeList, and only then a device CSR
-build.  The streaming path (``loader.load_csr(engine="device")``)
-double-buffers staging behind the parse dispatch and accumulates every
-batch in a packed device buffer that feeds the CSR build directly.
+synchronous block staging, jitted parse, per-batch compaction
+(``_compact_edges``, the historical ``parse.compact_edges`` kept here
+as part of the frozen baseline), a device->host copy of every batch,
+``np.concatenate``, a host EdgeList, and only then a device CSR build —
+all at the historical fixed geometry (beta=256 KiB, batch_blocks=8,
+padded tail batch).  The streaming path
+(``loader.load_csr(engine="device")``) double-buffers arena staging
+behind one fused parse+accumulate program per batch (donated in-place
+accumulators, remainder-sized tail batch) that feeds the CSR build
+directly; the ``_tuned`` row additionally lets ``core.tune``'s measured
+per-host profile pick the block geometry (full runs only — the first
+run on a host pays the sweep, later runs hit its cache).
 
 The snapshot rows measure GVEL's "write once, load many" story: the
 same graph converted once to a ``.gvel`` binary snapshot
@@ -46,13 +53,35 @@ import numpy as np
 from .common import dataset, emit, timeit
 
 
+def _compact_edges(src_b, dst_b, w_b, counts, total_cap):
+    """The historical ``parse.compact_edges`` (deleted from the library
+    when the fused ``parse_accumulate`` replaced it), preserved verbatim
+    so the baseline row keeps measuring the pre-loader pipeline."""
+    import jax.numpy as jnp
+    nb, cap = src_b.shape
+    starts = jnp.cumsum(counts) - counts
+    within = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    valid = within < counts[:, None]
+    dest = jnp.where(valid, starts[:, None] + within, total_cap)
+    dest = dest.reshape(-1)
+    out_src = jnp.full((total_cap,), -1, jnp.int32).at[dest].set(
+        src_b.reshape(-1), mode="drop")
+    out_dst = jnp.full((total_cap,), -1, jnp.int32).at[dest].set(
+        dst_b.reshape(-1), mode="drop")
+    out_w = None
+    if w_b is not None:
+        out_w = jnp.zeros((total_cap,), jnp.float32).at[dest].set(
+            w_b.reshape(-1), mode="drop")
+    return out_src, out_dst, out_w, jnp.sum(counts)
+
+
 def _batch_roundtrip_csr(path, v, *, beta=256 * 1024, overlap=64,
                          batch_blocks=8):
     """The old pipeline: per-batch host round-trip + EdgeList detour."""
     import jax.numpy as jnp
     from repro.core.blocks import owned_range, plan_blocks, stage_blocks
     from repro.core.csr import convert_to_csr
-    from repro.core.parse import compact_edges, parse_blocks
+    from repro.core.parse import parse_blocks
     from repro.core.types import EdgeList
 
     data = np.memmap(path, dtype=np.uint8, mode="r")
@@ -73,7 +102,7 @@ def _batch_roundtrip_csr(path, v, *, beta=256 * 1024, overlap=64,
         src_b, dst_b, w_b, counts = parse_blocks(
             jnp.asarray(bufs), ostart, oend,
             weighted=False, base=1, edge_cap=edge_cap)
-        src, dst, w, n = compact_edges(src_b, dst_b, w_b, counts, total_cap)
+        src, dst, w, n = _compact_edges(src_b, dst_b, w_b, counts, total_cap)
         n = int(n)
         chunks_src.append(np.asarray(src[:n]))     # device -> host, every batch
         chunks_dst.append(np.asarray(dst[:n]))
@@ -137,9 +166,9 @@ def run(quick: bool = False, json_path: str = None):
         snap_eng.clear_memo()
         return open_graph(p, engine="snapshot", num_vertices=v).csr(**kw)
 
-    def stream_csr(p):
+    def stream_csr(p, **kw):
         return open_graph(p, engine="device",
-                          num_vertices=v).csr(method="staged")
+                          num_vertices=v, **kw).csr(method="staged")
 
     def eager_zsnap_csr():
         # the pre-GraphSource contract: read_snapshot() decompresses and
@@ -149,6 +178,10 @@ def run(quick: bool = False, json_path: str = None):
 
     t_old = timeit(lambda: _batch_roundtrip_csr(path, v), repeat=repeat)
     t_new = timeit(lambda: stream_csr(path), repeat=repeat)
+    # measured per-host geometry (core.tune); quick mode skips it so
+    # verify.sh never pays a tuning sweep
+    t_tuned = None if quick else timeit(
+        lambda: stream_csr(path, tune=True), repeat=repeat)
     t_sel = timeit(lambda: cold(el_snap, method="staged"), repeat=repeat)
     t_scsr = timeit(lambda: cold(csr_snap), repeat=repeat)
     t_gz = timeit(lambda: stream_csr(gz), repeat=repeat)
@@ -168,6 +201,9 @@ def run(quick: bool = False, json_path: str = None):
         f"edges_per_s={e / t_old:.3e}")
     row("e2e.load_csr_streaming", t_new, path,
         f"edges_per_s={e / t_new:.3e};speedup={t_old / t_new:.2f}x")
+    if t_tuned is not None:
+        row("e2e.load_csr_streaming_tuned", t_tuned, path,
+            f"edges_per_s={e / t_tuned:.3e};vs_default={t_new / t_tuned:.2f}x")
     row("e2e.load_csr_snapshot_el", t_sel, el_snap,
         f"edges_per_s={e / t_sel:.3e};vs_streaming={t_new / t_sel:.2f}x")
     row("e2e.load_csr_snapshot_csr", t_scsr, csr_snap,

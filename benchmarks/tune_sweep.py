@@ -1,0 +1,87 @@
+"""Block-geometry sweep for the streaming loader (GVEL Figure 2).
+
+Times the fused parse+accumulate streaming step over a ``beta x
+batch_blocks`` grid — the measurement behind ``core.tune``'s per-host
+profile — and prints one CSV row per combo (fastest first).  By default
+the sweep runs on the autotuner's synthetic sample so the numbers match
+what ``open_graph(path, tune=True)`` would cache; ``--dataset`` sweeps
+a generated benchmark graph instead, and ``--file`` any edgelist file.
+
+    python -m benchmarks.tune_sweep --json sweep.json
+    python -m benchmarks.tune_sweep --dataset web_rmat --weighted
+    python -m benchmarks.tune_sweep --apply     # persist winner to the
+                                                # per-host tune cache
+
+``--json`` emits the machine-readable rows ``{beta, batch_blocks,
+seconds, mb_per_s}`` (plus a ``best`` marker) for cross-host diffing.
+"""
+import argparse
+import json
+import sys
+
+import numpy as np
+
+from .common import dataset, emit
+
+
+def main(argv=None) -> int:
+    from repro.core import tune
+
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.tune_sweep",
+        description="Sweep streaming block geometry (beta x batch_blocks)")
+    ap.add_argument("--dataset", help="benchmarks.common dataset name "
+                    "(e.g. web_rmat) instead of the synthetic sample")
+    ap.add_argument("--file", help="sweep an existing edgelist file")
+    ap.add_argument("--weighted", action="store_true")
+    ap.add_argument("--sample-mb", type=float, default=4.0,
+                    help="synthetic sample size (default 4 MB)")
+    ap.add_argument("--betas", default=None,
+                    help="comma-separated beta values in KiB "
+                    "(default 64,256,1024)")
+    ap.add_argument("--batch-blocks", default=None,
+                    help="comma-separated batch_blocks values (default 2,4,8)")
+    ap.add_argument("--repeat", type=int, default=2)
+    ap.add_argument("--json", dest="json_out", metavar="OUT.json")
+    ap.add_argument("--apply", action="store_true",
+                    help="persist the winner to the per-host tune cache "
+                    "(what tune=True loads)")
+    args = ap.parse_args(argv)
+
+    if args.dataset and args.file:
+        ap.error("--dataset and --file are mutually exclusive")
+    if args.dataset:
+        path, _, _ = dataset(args.dataset, weighted=args.weighted)
+        data = np.fromfile(path, np.uint8)
+    elif args.file:
+        data = np.fromfile(args.file, np.uint8)
+    else:
+        data = tune.synthetic_sample(int(args.sample_mb * 1e6),
+                                     weighted=args.weighted)
+
+    betas = tuple(int(b) * 1024 for b in args.betas.split(",")) \
+        if args.betas else tune.DEFAULT_BETAS
+    bbs = tuple(int(b) for b in args.batch_blocks.split(",")) \
+        if args.batch_blocks else tune.DEFAULT_BATCH_BLOCKS
+
+    rows = tune.run_sweep(data, betas=betas, batch_blocks=bbs,
+                          weighted=args.weighted, repeat=args.repeat)
+    best = tune.best_geometry(rows)
+    for r in rows:
+        r["best"] = (r["beta"] == best["beta"]
+                     and r["batch_blocks"] == best["batch_blocks"])
+        emit(f"tune.beta{r['beta'] // 1024}k_bb{r['batch_blocks']}",
+             r["seconds"],
+             f"mb_per_s={r['mb_per_s']}{';best' if r['best'] else ''}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=2)
+            f.write("\n")
+    if args.apply:
+        tune.save_geometry(rows, weighted=args.weighted)
+        print(f"applied: {best} -> {tune.cache_path()}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -61,4 +61,12 @@ assert rows and all(set(r) == {"name", "seconds", "mb", "speedup"}
 print(f"benchmark json: {len(rows)} rows OK")
 PY
 
+# perf gate: the streaming engine must never fall back below the batch
+# round-trip (speedup >= 1.0 even on the --quick graph, where fixed
+# costs compress ratios).  Floors only — quick-run speedups are not
+# comparable to the committed full-run rows, so tolerance mode is for
+# full-vs-full diffs across PRs (see scripts/bench_diff.py).
+python scripts/bench_diff.py BENCH_e2e.json /tmp/BENCH_e2e_quick.json \
+    --require-only --require 'e2e.load_csr_streaming>=1.0'
+
 echo "verify: all green"

@@ -19,6 +19,10 @@ Public API:
     read_csr, convert_to_csr             — file/EdgeList -> CSR (staged)
     read_mtx, read_mtx_csr, mtx_to_snapshot — MatrixMarket with honored attrs
     load_csr_sharded, host_shard_and_load — multi-device vertex-partitioned CSR
+    tune                                 — measured beta x batch_blocks
+                                           autotuning for the streaming
+                                           engines (open_graph(tune=True);
+                                           docs/performance.md)
     EdgeList, CSR, GraphMeta             — core types
 """
 from .types import CSR, EdgeList, GraphMeta
@@ -34,7 +38,7 @@ from .codecs import (register_codec, get_codec, available_codecs,
 from .generate import make_graph_file, rmat_edges, uniform_edges, grid_edges, write_edgelist
 from .distributed import load_csr_sharded, host_shard_and_load
 from . import (baselines, build, codecs, compat, degrees, loader, parse,
-               parse_np, blocks, snapshot, source)
+               parse_np, blocks, snapshot, source, tune)
 
 __all__ = [
     "CSR", "EdgeList", "GraphMeta",
@@ -51,5 +55,5 @@ __all__ = [
     "write_edgelist",
     "load_csr_sharded", "host_shard_and_load",
     "baselines", "build", "codecs", "compat", "degrees", "loader", "parse",
-    "parse_np", "blocks", "snapshot", "source",
+    "parse_np", "blocks", "snapshot", "source", "tune",
 ]

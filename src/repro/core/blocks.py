@@ -53,10 +53,64 @@ def plan_blocks(file_len: int, beta: int = 256 * 1024, overlap: int = 64) -> Blo
     return BlockPlan(file_len, beta, overlap, num_blocks, overlap + beta)
 
 
-def _newline_flat(nb: int, plan: BlockPlan) -> np.ndarray:
-    """Newline-filled flat buffer spanning ``nb`` consecutive blocks
-    (one block's owned bytes per stride step, plus the final overlap)."""
-    return np.full((nb - 1) * plan.beta + plan.buf_len, NEWLINE, np.uint8)
+def flat_len(nb: int, plan: BlockPlan) -> int:
+    """Bytes of flat staging needed for ``nb`` consecutive blocks (one
+    block's owned bytes per stride step, plus the final overlap)."""
+    return (nb - 1) * plan.beta + plan.buf_len
+
+
+class StagingArena:
+    """A ring of reusable flat staging buffers for the streaming loader.
+
+    Without an arena every staged batch allocates a fresh flat buffer
+    (and the allocator pays a page-fault walk over it).  The loader
+    instead creates one arena per stream and passes it to every
+    ``stage`` call; the per-batch host cost drops to a single memcpy of
+    the new bytes.
+
+    Ring discipline (why ``slots=2`` is safe): the loader double-buffers
+    — batch *i* is converted to a device array in the consuming thread
+    while batch *i+1* stages in the prefetch thread, so two buffers are
+    live at once.  A slot is only reused at batch *i+2*, which the
+    prefetch thread starts *after* the consumer finished with batch *i*
+    (``jnp.asarray`` of the strided view makes its contiguous copy
+    before the consumer submits more staging work).  Consumers that
+    hold staged views longer must pass more ``slots`` or copy.
+
+    Buffers are handed out dirty; the staging code newline-fills only
+    the head/tail slack it does not overwrite with file bytes.
+    """
+
+    def __init__(self, nbytes: int, slots: int = 2):
+        self._slots = [np.full(max(int(nbytes), 1), NEWLINE, np.uint8)
+                       for _ in range(max(int(slots), 2))]
+        self._turn = 0
+
+    def take(self, nbytes: int) -> np.ndarray:
+        """Next ring buffer, grown if needed; contents are stale."""
+        i = self._turn
+        self._turn = (self._turn + 1) % len(self._slots)
+        if self._slots[i].size < nbytes:
+            self._slots[i] = np.full(nbytes, NEWLINE, np.uint8)
+        return self._slots[i][:nbytes]
+
+
+def _take_flat(nb: int, plan: BlockPlan, arena: StagingArena | None,
+               filled_lo: int, filled_hi: int) -> np.ndarray:
+    """Flat staging buffer for ``nb`` blocks; everything outside
+    ``[filled_lo, filled_hi)`` (which the caller will overwrite with
+    file bytes) is newline-filled."""
+    need = flat_len(nb, plan)
+    if arena is None:
+        return np.full(need, NEWLINE, np.uint8)
+    flat = arena.take(need)
+    lo = max(min(filled_lo, need), 0)
+    hi = max(min(filled_hi, need), lo)
+    if lo:
+        flat[:lo] = NEWLINE
+    if hi < need:
+        flat[hi:] = NEWLINE
+    return flat
 
 
 def _strided_block_view(flat: np.ndarray, nb: int, plan: BlockPlan) -> np.ndarray:
@@ -68,7 +122,47 @@ def _strided_block_view(flat: np.ndarray, nb: int, plan: BlockPlan) -> np.ndarra
         writeable=False)
 
 
-def stage_blocks(data: np.ndarray, plan: BlockPlan, block_ids: np.ndarray) -> np.ndarray:
+def check_line_overlap(view: np.ndarray, plan: BlockPlan,
+                       ids: np.ndarray, data_len: int,
+                       describe: str = "staged blocks") -> None:
+    """Detect lines longer than ``plan.overlap`` crossing a block's owned
+    start — the one staging geometry the parser cannot recover from.
+
+    The parse contract says no line may exceed ``overlap`` bytes; when a
+    longer line spans a block boundary its head lies before the owning
+    block's buffer and the parser would silently mis-parse the truncated
+    tail (a too-long comment whose tail looks like digits becomes a
+    phantom edge).  For in-contract inputs every ``overlap``-wide window
+    of file bytes contains a newline, so this check never fires on them:
+    a block whose left-context window ``[b*beta - overlap, b*beta)`` has
+    *no* newline proves a violating line and raises, naming the byte
+    offset.  Block 0 is exempt (its left context is synthetic padding),
+    as are windows past EOF (newline-padded).
+    """
+    ids = np.asarray(ids, np.int64)
+    if len(ids) == 0:
+        return
+    need = (ids > 0) & (ids * plan.beta < data_len)
+    if not need.any():
+        return
+    ok = (view[:, :plan.overlap] == NEWLINE).any(axis=1)
+    bad = need & ~ok
+    if bad.any():
+        b = int(ids[int(np.argmax(bad))])
+        off = b * plan.beta
+        raise ValueError(
+            f"{describe}: no newline within overlap={plan.overlap} bytes "
+            f"before byte offset {off} (block {b}'s owned start) — a line "
+            f"longer than {plan.overlap} bytes crosses the block boundary "
+            f"there and would be mis-parsed.  Re-run with a larger "
+            f"overlap= (it must exceed the longest line, including "
+            f"comments), or strip overlong lines; offsets are relative to "
+            f"any header offset skipped at open.")
+
+
+def stage_blocks(data: np.ndarray, plan: BlockPlan, block_ids: np.ndarray,
+                 arena: StagingArena | None = None,
+                 check_lines: bool = False) -> np.ndarray:
     """Gather block buffers (with left overlap) into an (nb, buf_len) array.
 
     ``data`` is the memory-mapped file bytes (uint8).  Out-of-file regions
@@ -78,7 +172,14 @@ def stage_blocks(data: np.ndarray, plan: BlockPlan, block_ids: np.ndarray) -> np
     path: one contiguous memcpy of the spanned byte range into a
     newline-padded flat buffer, then a zero-copy strided window per
     block — the per-block Python loop this replaces copied the overlap
-    bytes twice and paid a numpy slice round-trip per block.
+    bytes twice and paid a numpy slice round-trip per block.  Passing an
+    ``arena`` reuses its ring buffers instead of allocating per batch
+    (see :class:`StagingArena` for the reuse discipline).
+
+    ``check_lines=True`` (the text-parse pipelines set it; raw byte
+    staging does not) raises ``ValueError`` when a line longer than
+    ``plan.overlap`` bytes crosses a block's owned start
+    (:func:`check_line_overlap`).
     """
     ids = np.asarray(block_ids, np.int64)
     nb = len(ids)
@@ -87,20 +188,24 @@ def stage_blocks(data: np.ndarray, plan: BlockPlan, block_ids: np.ndarray) -> np
         return np.zeros((0, plan.buf_len), np.uint8)
     if nb == 1 or np.all(np.diff(ids) == 1):
         lo = int(ids[0]) * plan.beta - plan.overlap        # may be < 0
-        flat = _newline_flat(nb, plan)
-        s, e = max(lo, 0), min(lo + len(flat), n)
+        s = max(lo, 0)
+        e = min(lo + flat_len(nb, plan), n)
+        flat = _take_flat(nb, plan, arena, s - lo, e - lo)
         if e > s:
             flat[s - lo : e - lo] = data[s:e]
-        return _strided_block_view(flat, nb, plan)
-    # general (non-contiguous) case: per-block slice copies
-    out = np.full((nb, plan.buf_len), NEWLINE, np.uint8)
-    for row, b in enumerate(ids):
-        lo = int(b) * plan.beta - plan.overlap
-        hi = int(b) * plan.beta + plan.beta
-        s, e = max(lo, 0), min(hi, n)
-        if e > s:
-            out[row, s - lo : e - lo] = data[s:e]
-    return out
+        view = _strided_block_view(flat, nb, plan)
+    else:
+        # general (non-contiguous) case: per-block slice copies
+        view = np.full((nb, plan.buf_len), NEWLINE, np.uint8)
+        for row, b in enumerate(ids):
+            lo = int(b) * plan.beta - plan.overlap
+            hi = int(b) * plan.beta + plan.beta
+            s, e = max(lo, 0), min(hi, n)
+            if e > s:
+                view[row, s - lo : e - lo] = data[s:e]
+    if check_lines:
+        check_line_overlap(view, plan, ids, n)
+    return view
 
 
 def owned_range(plan: BlockPlan) -> tuple[int, int]:
@@ -127,8 +232,10 @@ class MemoryBlockSource:
         self.data = data
         self.length = len(data)
 
-    def stage(self, plan: BlockPlan, block_ids: np.ndarray) -> np.ndarray:
-        return stage_blocks(self.data, plan, block_ids)
+    def stage(self, plan: BlockPlan, block_ids: np.ndarray,
+              arena: StagingArena | None = None,
+              check_lines: bool = False) -> np.ndarray:
+        return stage_blocks(self.data, plan, block_ids, arena, check_lines)
 
     def finish(self) -> None:
         pass
@@ -142,8 +249,15 @@ class SequentialBlockSource:
     dropping the first ``skip`` bytes (an embedded-header offset, in
     uncompressed coordinates).  Batches must be consumed in order with
     contiguous ascending block ids — exactly how the streaming loader
-    iterates — and only ``overlap`` bytes of tail context are retained
-    between batches, so memory stays O(batch) regardless of file size.
+    iterates.
+
+    Pending bytes are held as a queue of zero-copy chunk views with a
+    running stream offset: staging copies each overlapping chunk span
+    straight into the flat batch buffer (one memcpy per chunk) and
+    retains only the unconsumed tail views for the next batch's overlap
+    — memory stays O(batch), and there is no per-batch compaction of a
+    growing buffer (the old ``bytearray`` design paid an O(buffered)
+    memmove per batch to delete its consumed prefix).
 
     ``finish`` drains the stream and verifies the total produced length
     against ``length``: a stream that is shorter or longer than declared
@@ -158,8 +272,9 @@ class SequentialBlockSource:
         self._to_skip = skip
         self._describe = describe
         self._hint = mismatch_hint
-        self._buf = bytearray()
-        self._buf_start = 0            # stream offset of _buf[0] (post-skip)
+        self._q: list[np.ndarray] = []     # pending chunk views, in order
+        self._q_start = 0              # stream offset of _q[0][0] (post-skip)
+        self._q_len = 0                # total bytes queued
         self._produced = 0             # post-skip bytes pulled so far
         self._next_block = 0
 
@@ -171,11 +286,16 @@ class SequentialBlockSource:
             drop = min(self._to_skip, len(chunk))
             self._to_skip -= drop
             chunk = chunk[drop:]
-        self._buf += chunk
         self._produced += len(chunk)
+        if len(chunk):
+            view = np.frombuffer(chunk, np.uint8)
+            self._q.append(view)
+            self._q_len += len(view)
         return True
 
-    def stage(self, plan: BlockPlan, block_ids: np.ndarray) -> np.ndarray:
+    def stage(self, plan: BlockPlan, block_ids: np.ndarray,
+              arena: StagingArena | None = None,
+              check_lines: bool = False) -> np.ndarray:
         ids = np.asarray(block_ids, np.int64)
         nb = len(ids)
         if nb == 0:
@@ -189,25 +309,42 @@ class SequentialBlockSource:
         self._next_block = int(ids[-1]) + 1
         lo = int(ids[0]) * plan.beta - plan.overlap          # may be < 0
         hi = min((int(ids[-1]) + 1) * plan.beta, self.length)
-        while self._buf_start + len(self._buf) < hi:
+        while self._q_start + self._q_len < hi:
             if not self._pull():
                 break                 # short stream: pad now, finish() raises
-        flat = _newline_flat(nb, plan)
         s = max(lo, 0)
-        e = min(hi, self._buf_start + len(self._buf))
-        if e > s:
-            off = s - self._buf_start
-            flat[s - lo : e - lo] = np.frombuffer(
-                self._buf, np.uint8, count=e - s, offset=off)
-        keep_from = max((int(ids[-1]) + 1) * plan.beta - plan.overlap, 0)
-        if keep_from > self._buf_start:
-            del self._buf[:keep_from - self._buf_start]
-            self._buf_start = keep_from
-        return _strided_block_view(flat, nb, plan)
+        e = min(hi, self._q_start + self._q_len)
+        flat = _take_flat(nb, plan, arena, s - lo, e - lo)
+        pos = self._q_start           # walk the queue once, copying spans
+        for view in self._q:
+            if pos >= e:
+                break
+            c0, c1 = max(s - pos, 0), min(e - pos, len(view))
+            if c1 > c0:
+                flat[pos + c0 - lo : pos + c1 - lo] = view[c0:c1]
+            pos += len(view)
+        # retain only the tail the next batch's overlap needs (views,
+        # not copies); whole chunks before it are dropped
+        keep_from = max((int(ids[-1]) + 1) * plan.beta - plan.overlap,
+                        self._q_start)
+        while self._q and self._q_start + len(self._q[0]) <= keep_from:
+            dropped = self._q.pop(0)
+            self._q_start += len(dropped)
+            self._q_len -= len(dropped)
+        if self._q and keep_from > self._q_start:
+            cut = keep_from - self._q_start
+            self._q[0] = self._q[0][cut:]
+            self._q_start = keep_from
+            self._q_len -= cut
+        out = _strided_block_view(flat, nb, plan)
+        if check_lines:
+            check_line_overlap(out, plan, ids, self.length, self._describe)
+        return out
 
     def finish(self) -> None:
         while self._pull():
-            pass
+            self._q.clear()           # drained bytes are only counted
+            self._q_len = 0
         if self._produced != self.length:
             raise ValueError(
                 f"{self._describe}: stream decompressed to "

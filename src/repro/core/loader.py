@@ -25,15 +25,30 @@ name from the registry:
 The device/pallas engines are *streaming* (GVEL's pipelined read):
 
   1. a host prefetch thread stages the next batch of overlap-padded
-     byte blocks (``blocks.stage_blocks``) while the device parses the
-     current one — read IO and parse compute overlap, the madvise /
-     double-buffer effect the paper measures;
-  2. every parsed batch is scattered into a device-side packed edge
-     buffer at a running offset (``_accumulate_batch``) — edges never
-     round-trip through numpy between batches;
-  3. ``load_csr`` hands the packed device buffers straight to the
+     byte blocks (``blocks.stage_blocks``, through a reusable
+     :class:`~repro.core.blocks.StagingArena` — no per-batch
+     allocation) while the device parses the current one — read IO and
+     parse compute overlap, the madvise / double-buffer effect the
+     paper measures;
+  2. each batch runs ONE jitted program (``parse.parse_accumulate``)
+     that parses the blocks and writes the edges straight into packed
+     device accumulators at the running offset, with the accumulator
+     buffers *donated* so the update is in-place — per-block parse
+     outputs never materialize between programs and the capacity-sized
+     buffers are not copied per batch (the pallas engine keeps its
+     kernel parse + a donated ``_accumulate_batch``);
+  3. the final short batch runs a remainder-sized program instead of
+     being padded with ``NEWLINE`` blocks to ``batch_blocks`` — small
+     inputs don't pay full-batch parse cost for padding;
+  4. ``load_csr`` hands the packed device buffers straight to the
      rank-based CSR builders (``build.csr_global``/``csr_staged``), so
      file -> CSR never materializes a host-side EdgeList.
+
+Block geometry (``beta`` x ``batch_blocks``) defaults to
+``DEFAULT_BETA``/``DEFAULT_BATCH_BLOCKS`` and can be *measured* instead:
+``tune=True`` (via ``LoadOptions`` / ``open_graph``) fills un-pinned
+geometry from the per-host profile in :mod:`repro.core.tune` (a GVEL
+Fig. 2 style sweep, run once and cached).  See docs/performance.md.
 
 Compressed inputs are transparent at every entry point: gzip and
 framed files (``core.codecs``) are sniffed by magic, streamed through
@@ -58,8 +73,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import build
-from .blocks import NEWLINE, owned_range, plan_blocks
-from .parse import parse_blocks
+from .blocks import StagingArena, flat_len, owned_range, plan_blocks
+from .parse import donation_supported, parse_accumulate
 from .types import CSR, EdgeList
 
 I32 = jnp.int32
@@ -69,6 +84,13 @@ I32 = jnp.int32
 # the streaming device engine
 DEFAULT_EDGELIST_ENGINE = "numpy"
 DEFAULT_CSR_ENGINE = "device"
+
+# fallback streaming block geometry (GVEL's paper values), used when the
+# caller pins nothing and tuning is off; `tune=True` replaces them with
+# the measured per-host profile (core.tune)
+DEFAULT_BETA = 256 * 1024
+DEFAULT_BATCH_BLOCKS = 8
+DEFAULT_OVERLAP = 64
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +109,10 @@ class LoadOptions:
     file says" (snapshot flags / MTX banner; plain text has no header,
     so it resolves to False).  ``engine_kw`` carries engine tuning
     knobs (``beta``, ``batch_blocks``, ``num_workers``, ...) verbatim.
+    ``tune=True`` fills un-pinned streaming block geometry from the
+    measured per-host profile (:mod:`repro.core.tune`); explicit
+    ``engine_kw`` values always win, and non-streaming engines ignore
+    it.
     """
 
     engine: Optional[str] = None
@@ -95,10 +121,11 @@ class LoadOptions:
     base: int = 1
     num_vertices: Optional[int] = None
     offset: int = 0
+    tune: bool = False
     engine_kw: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     _OWN_FIELDS = ("engine", "weighted", "symmetric", "base",
-                   "num_vertices", "offset")
+                   "num_vertices", "offset", "tune")
 
     def __post_init__(self):
         if self.base not in (0, 1):
@@ -180,17 +207,8 @@ def csr_convert_engine(engine: str) -> str:
 # streaming device pipeline
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("cap",))
-def _accumulate_batch(acc_src, acc_dst, acc_w, total, src_b, dst_b, w_b,
-                      counts, *, cap: int):
-    """Scatter one batch of per-block fixed-capacity parses into the
-    packed accumulator at the running offset.
-
-    The device-side analogue of gluing per-thread edgelists: an exclusive
-    scan over per-block counts gives each block a disjoint destination
-    range starting at ``total``.  Replaces the old per-batch
-    device->numpy copy + final np.concatenate.
-    """
+def _accumulate_impl(acc_src, acc_dst, acc_w, total, src_b, dst_b, w_b,
+                     counts, *, cap: int):
     nb, bcap = src_b.shape
     starts = total + jnp.cumsum(counts) - counts
     within = jnp.arange(bcap, dtype=I32)[None, :]
@@ -201,6 +219,36 @@ def _accumulate_batch(acc_src, acc_dst, acc_w, total, src_b, dst_b, w_b,
     if acc_w is not None and w_b is not None:
         acc_w = acc_w.at[dest].set(w_b.reshape(-1), mode="drop")
     return acc_src, acc_dst, acc_w, total + jnp.sum(counts, dtype=I32)
+
+
+@functools.lru_cache(maxsize=None)
+def _accumulate_jit(donate: bool):
+    return jax.jit(_accumulate_impl, static_argnames=("cap",),
+                   donate_argnums=(0, 1, 2) if donate else ())
+
+
+def _accumulate_batch(acc_src, acc_dst, acc_w, total, src_b, dst_b, w_b,
+                      counts, *, cap: int, donate: Optional[bool] = None):
+    """Scatter one batch of per-block fixed-capacity parses into the
+    packed accumulator at the running offset.
+
+    The device-side analogue of gluing per-thread edgelists: an exclusive
+    scan over per-block counts gives each block a disjoint destination
+    range starting at ``total``.  Replaces the old per-batch
+    device->numpy copy + final np.concatenate.  Used by the pallas
+    engine (whose parse is the separate kernel program); the device
+    engine's fused path is :func:`repro.core.parse.parse_accumulate`.
+
+    ``donate=None`` probes the backend once and donates the accumulator
+    buffers when supported, making the scatter in-place instead of
+    copying the capacity-sized buffers every batch.  Donated inputs are
+    consumed — rebind, never reuse, the passed accumulators.
+    ``donate=False`` is the fallback for backends that refuse donation.
+    """
+    if donate is None:
+        donate = donation_supported()
+    return _accumulate_jit(bool(donate))(
+        acc_src, acc_dst, acc_w, total, src_b, dst_b, w_b, counts, cap=cap)
 
 
 def _stream_edges(
@@ -217,8 +265,12 @@ def _stream_edges(
     """File -> packed device edge buffers, double-buffered.
 
     Returns ((src, dst, w, total), capacity).  The prefetch thread stages
-    batch i+1 while the (async-dispatched) jitted parser and accumulator
-    work on batch i, so host staging overlaps device compute.
+    batch i+1 (into a reusable :class:`StagingArena` ring — one memcpy
+    per batch, no allocation) while the (async-dispatched) fused
+    parse+accumulate program works on batch i, so host staging overlaps
+    device compute.  The final short batch is *not* padded to
+    ``batch_blocks``: it runs a second, remainder-sized program, so a
+    2-block file parses 2 blocks, not ``batch_blocks``.
 
     Compressed inputs (``.el.gz`` / framed — sniffed by magic in
     :func:`codecs.open_block_source`) ride the same pipeline: the block
@@ -226,6 +278,11 @@ def _stream_edges(
     so decompression overlaps the device parse exactly like raw-file IO
     does.  Framed files force ``beta`` to the file's frame size so
     frames map 1:1 onto staging blocks.
+
+    Lines longer than ``overlap`` bytes that cross a block boundary are
+    detected during staging and raise ``ValueError``
+    (:func:`repro.core.blocks.check_line_overlap`) instead of silently
+    mis-parsing.
     """
     from .codecs import open_block_source
     source, forced_beta = open_block_source(path, offset)
@@ -237,10 +294,12 @@ def _stream_edges(
     num_batches = -(-plan.num_blocks // batch_blocks)
     # GVEL over-allocation: a bytes-derived bound on the final edge count
     # (~file_len/4 slots).  This trades device memory (~1 int32 per file
-    # byte across src+dst) for a single allocation and scatter-only
+    # byte across src+dst) for a single allocation and in-place (donated)
     # accumulation; load_csr shrinks to a pow-2 prefix before sorting.
     # Growable buffers for accelerator-memory-bound inputs are an open
-    # item (ROADMAP.md).
+    # item (ROADMAP.md).  Because batches are trimmed (never padded), the
+    # per-batch windows tile [0, cap) exactly and the running offset can
+    # never push a window past the end.
     cap = plan.num_blocks * edge_cap
     if cap > np.iinfo(np.int32).max:
         # Scatter destinations are int32 (jax default dtype regime); a
@@ -251,15 +310,12 @@ def _stream_edges(
             f"streaming engine; use engine='numpy'/'threads' or shard the "
             f"file (load_csr_sharded)")
 
+    arena = StagingArena(flat_len(min(batch_blocks, plan.num_blocks), plan))
+
     def stage(i: int) -> np.ndarray:
         start = i * batch_blocks
         ids = np.arange(start, min(start + batch_blocks, plan.num_blocks))
-        bufs = source.stage(plan, ids)
-        if len(ids) < batch_blocks:    # pad batch to keep one jitted program
-            pad = np.full((batch_blocks - len(ids), plan.buf_len), NEWLINE,
-                          np.uint8)
-            bufs = np.concatenate([bufs, pad])
-        return bufs
+        return source.stage(plan, ids, arena=arena, check_lines=True)
 
     acc_src = jnp.full((cap,), -1, I32)
     acc_dst = jnp.full((cap,), -1, I32)
@@ -274,18 +330,20 @@ def _stream_edges(
             bufs = fut.result()
             if i + 1 < num_batches:
                 fut = pool.submit(stage, i + 1)     # double buffer
+            nb = bufs.shape[0]          # < batch_blocks on the tail batch
             if parse == "pallas":
                 from ..kernels import parse_edges
                 src_b, dst_b, w_b, counts = parse_edges(
                     jnp.asarray(bufs), os_, oe, weighted=weighted, base=base,
                     edge_cap=edge_cap)
+                acc_src, acc_dst, acc_w, total = _accumulate_batch(
+                    acc_src, acc_dst, acc_w, total, src_b, dst_b, w_b,
+                    counts, cap=cap)
             else:
-                src_b, dst_b, w_b, counts = parse_blocks(
-                    jnp.asarray(bufs), ostart, oend,
-                    weighted=weighted, base=base, edge_cap=edge_cap)
-            acc_src, acc_dst, acc_w, total = _accumulate_batch(
-                acc_src, acc_dst, acc_w, total, src_b, dst_b, w_b, counts,
-                cap=cap)
+                acc_src, acc_dst, acc_w, total = parse_accumulate(
+                    acc_src, acc_dst, acc_w, total, jnp.asarray(bufs),
+                    ostart[:nb], oend[:nb], weighted=weighted, base=base,
+                    edge_bound=nb * edge_cap)
     # A stream shorter/longer than its header declared (truncated file,
     # lying gzip trailer) must fail here, not return a partial graph.
     source.finish()
@@ -310,11 +368,17 @@ class _StreamingEngine:
         self._parse = parse
 
     def stream(self, path: str, *, weighted: bool = False, base: int = 1,
-               offset: int = 0, beta: int = 256 * 1024, overlap: int = 64,
-               batch_blocks: int = 8) -> Tuple[DeviceEdges, int]:
-        return _stream_edges(path, weighted=weighted, base=base,
-                             offset=offset, beta=beta, overlap=overlap,
-                             batch_blocks=batch_blocks, parse=self._parse)
+               offset: int = 0, beta: Optional[int] = None,
+               overlap: Optional[int] = None,
+               batch_blocks: Optional[int] = None
+               ) -> Tuple[DeviceEdges, int]:
+        return _stream_edges(
+            path, weighted=weighted, base=base, offset=offset,
+            beta=DEFAULT_BETA if beta is None else beta,
+            overlap=DEFAULT_OVERLAP if overlap is None else overlap,
+            batch_blocks=(DEFAULT_BATCH_BLOCKS if batch_blocks is None
+                          else batch_blocks),
+            parse=self._parse)
 
     def read_edgelist(self, path: str, *, weighted: bool = False,
                       base: int = 1, num_vertices: Optional[int] = None,
@@ -358,10 +422,34 @@ def _register_builtin_engines() -> None:
 # engine-call implementations (shared by GraphSource and the wrappers)
 # ---------------------------------------------------------------------------
 
+def resolve_tuned(opts: LoadOptions) -> LoadOptions:
+    """Fill un-pinned streaming block geometry from the measured
+    per-host profile when ``opts.tune`` is set.
+
+    Only streaming engines have ``beta``/``batch_blocks`` geometry;
+    tuning is a no-op for host/snapshot engines.  Explicit ``engine_kw``
+    values always win over the profile (pin one, tune the other).  The
+    first tuned load on a host runs the measurement sweep and caches it
+    (:func:`repro.core.tune.tuned_geometry`).
+    """
+    if not opts.tune or not isinstance(_REGISTRY.get(opts.engine),
+                                       _StreamingEngine):
+        return opts
+    kw = dict(opts.engine_kw)
+    if "beta" in kw and "batch_blocks" in kw:
+        return opts
+    from .tune import tuned_geometry
+    g = tuned_geometry(weighted=bool(opts.weighted))
+    kw.setdefault("beta", g["beta"])
+    kw.setdefault("batch_blocks", g["batch_blocks"])
+    return opts.replace(engine_kw=kw)
+
+
 def read_edgelist_via(path: str, opts: LoadOptions) -> EdgeList:
     """File -> EdgeList through ``opts.engine`` (must be concrete).
     Symmetrization happens here, once — engines return the raw edge
     set (the engine contract, docs/extending.md)."""
+    opts = resolve_tuned(opts)
     el = get_engine(opts.engine).read_edgelist(path, **opts.read_kwargs())
     if opts.symmetric:
         from .edgelist import symmetrize
@@ -383,6 +471,7 @@ def read_csr_via(path: str, opts: LoadOptions, *, method: str = "staged",
     re-reading the file.  Symmetric graphs always take the EdgeList
     route (reverse-edge expansion is a host concatenation today).
     """
+    opts = resolve_tuned(opts)
     weighted = bool(opts.weighted)
     eng = get_engine(opts.engine)
     if hasattr(eng, "read_csr_prebuilt") and not opts.symmetric:
@@ -437,6 +526,7 @@ def load_edgelist(
     base: int = 1,
     num_vertices: Optional[int] = None,
     offset: int = 0,
+    tune: bool = False,
     **engine_kw,
 ) -> EdgeList:
     """File -> EdgeList through the named engine.
@@ -445,13 +535,15 @@ def load_edgelist(
     front door — equivalent to ``open_graph(path, ...).edgelist()``.
     ``offset`` skips a header prefix (MTX bodies); ``engine_kw`` is
     forwarded to the engine (beta/batch_blocks for device, num_workers
-    for threads, chunk_bytes for numpy, ...).  Binary ``.gvel`` files
-    are detected by magic and routed to the snapshot engine.
+    for threads, chunk_bytes for numpy, ...); ``tune=True`` fills
+    un-pinned streaming geometry from the measured per-host profile.
+    Binary ``.gvel`` files are detected by magic and routed to the
+    snapshot engine.
     """
     from .source import open_graph
     return open_graph(path, engine=engine, weighted=weighted,
                       symmetric=symmetric, base=base,
-                      num_vertices=num_vertices, offset=offset,
+                      num_vertices=num_vertices, offset=offset, tune=tune,
                       validate=False, **engine_kw).edgelist()
 
 
@@ -466,23 +558,27 @@ def load_csr(
     method: str = "staged",
     rho: int = 4,
     offset: int = 0,
+    tune: bool = False,
     **engine_kw,
 ) -> CSR:
     """File -> CSR through the named engine.
 
     A thin wrapper over the :class:`~repro.core.source.GraphSource`
     front door — equivalent to ``open_graph(path, ...).csr(...)``.
-    Streaming engines (device, pallas) run fused: packed device edge
-    buffers feed ``csr_global``/``csr_staged`` directly — no host
-    EdgeList in between.  Host engines read an EdgeList and convert.
-    Binary ``.gvel`` files are detected by magic and routed to the
-    snapshot engine; an embedded prebuilt CSR is served straight from
-    mmap (``method``/``rho`` do not apply — the stored CSR wins).
+    Streaming engines (device, pallas) run fused: one jitted program
+    per batch parses the blocks and accumulates the edges in packed
+    (donated) device buffers that feed ``csr_global``/``csr_staged``
+    directly — no host EdgeList in between.  ``tune=True`` fills
+    un-pinned streaming geometry from the measured per-host profile.
+    Host engines read an EdgeList and convert.  Binary ``.gvel`` files
+    are detected by magic and routed to the snapshot engine; an
+    embedded prebuilt CSR is served straight from mmap
+    (``method``/``rho`` do not apply — the stored CSR wins).
     """
     from .source import open_graph
     return open_graph(path, engine=engine, weighted=weighted,
                       symmetric=symmetric, base=base,
-                      num_vertices=num_vertices, offset=offset,
+                      num_vertices=num_vertices, offset=offset, tune=tune,
                       validate=False, **engine_kw).csr(method=method, rho=rho)
 
 

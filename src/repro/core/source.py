@@ -47,7 +47,7 @@ from typing import Any, Dict, Optional, Tuple
 
 from .loader import (DEFAULT_CSR_ENGINE, DEFAULT_EDGELIST_ENGINE, LoadOptions,
                      available_engines, csr_convert_engine, get_engine,
-                     read_csr_via, read_edgelist_via)
+                     read_csr_via, read_edgelist_via, resolve_tuned)
 from .types import CSR, EdgeList
 
 FORMAT_GVEL = "gvel"
@@ -350,7 +350,7 @@ class GraphSource:
             raise ValueError(
                 f"{self.path}: stream() does not apply MTX banner "
                 f"attributes; use .edgelist() or .csr()")
-        opts = self._opts_for("csr")
+        opts = resolve_tuned(self._opts_for("csr"))
         eng = get_engine(opts.engine)
         if not hasattr(eng, "stream"):
             raise ValueError(
@@ -413,6 +413,7 @@ def open_graph(
     validate: bool = True,
     symmetric: bool = False,
     num_vertices: Optional[int] = None,
+    tune: bool = False,
     **engine_kw,
 ) -> GraphSource:
     """Open a graph file as a lazy :class:`GraphSource` handle.
@@ -429,11 +430,14 @@ def open_graph(
     section payloads; ``validate=False`` defers even those to first
     access (useful for paths only a custom engine knows how to read).
     ``engine_kw`` carries engine tuning knobs (``beta``,
-    ``batch_blocks``, ``num_workers``, ...).
+    ``batch_blocks``, ``num_workers``, ...).  ``tune=True`` fills
+    un-pinned streaming block geometry from the measured per-host
+    profile (:mod:`repro.core.tune`; first use on a host runs the
+    sweep and caches it — see docs/performance.md).
     """
     opts = LoadOptions(engine=engine, weighted=weighted, symmetric=symmetric,
                        base=1 if base is None else base,
-                       num_vertices=num_vertices, offset=offset,
+                       num_vertices=num_vertices, offset=offset, tune=tune,
                        engine_kw=dict(engine_kw))
     return GraphSource(path, opts, validate=validate)
 

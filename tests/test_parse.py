@@ -3,7 +3,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core.parse import parse_block, parse_blocks, compact_edges
+from repro.core.parse import parse_accumulate, parse_block, parse_blocks
 from repro.core.parse_np import chunk_bounds, parse_chunk_np
 
 
@@ -116,15 +116,25 @@ def test_ownership_partition_is_exact():
         assert total == 200, beta
 
 
-def test_compact_edges_packs_counts():
+def test_parse_accumulate_packs_batches():
+    """The fused step packs each batch's edges contiguously at the
+    running offset, leaving -1 padding past the total."""
     bufs = jnp.asarray(np.stack([_pad(b"1 2\n3 4\n"), _pad(b"5 6\n")]))
     os_ = jnp.zeros(2, jnp.int32)
     oe = jnp.full(2, bufs.shape[1], jnp.int32)
-    s, d, w, c = parse_blocks(bufs, os_, oe, weighted=False, base=1,
-                              edge_cap=8)
-    cs, cd, _, tot = compact_edges(s, d, None, c, 16)
-    assert int(tot) == 3
-    assert np.asarray(cs[:3]).tolist() == [0, 2, 4]
+    acc_s = jnp.full((16,), -1, jnp.int32)
+    acc_d = jnp.full((16,), -1, jnp.int32)
+    tot = jnp.zeros((), jnp.int32)
+    acc_s, acc_d, _, tot = parse_accumulate(
+        acc_s, acc_d, None, tot, bufs, os_, oe, weighted=False, base=1,
+        edge_bound=8, donate=False)
+    # second batch lands after the first batch's edges
+    acc_s, acc_d, _, tot = parse_accumulate(
+        acc_s, acc_d, None, tot, jnp.asarray(np.stack([_pad(b"7 8\n")])),
+        os_[:1], oe[:1], weighted=False, base=1, edge_bound=8, donate=False)
+    assert int(tot) == 4
+    assert np.asarray(acc_s).tolist() == [0, 2, 4, 6] + [-1] * 12
+    assert np.asarray(acc_d).tolist() == [1, 3, 5, 7] + [-1] * 12
 
 
 def test_chunk_bounds_newline_aligned():
