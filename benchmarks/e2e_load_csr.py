@@ -35,6 +35,28 @@ CSR sections at open, while ``open_graph(path).csr()`` decodes only
 the CSR sections (per-section lazy decompression, this PR's ROADMAP
 item).
 
+The sharded rows measure the byte-range-sharded streaming load
+(``core.distributed.load_csr_sharded_stream`` /
+``GraphSource.csr_sharded``) at d=2 and d=4, in one subprocess forced
+to 4 CPU host devices.  XLA splits the host threadpool across forced
+devices, so the subprocess re-times single-device streaming and the
+d=1 sharded pipeline under the same split, and each sharded row's
+``speedup`` field is its gain over the frozen batch-roundtrip
+baseline *like every other row*, chained through that same-split
+streaming time (``t_old/t_streaming x t_streaming_same_split/t_dN``)
+so the cross-process normalization is measured, not assumed.  The
+derived fields carry the raw same-split diagnostics
+(``vs_stream_same_cfg``, ``vs_sharded_d1``, ``cores``): on a
+single-core container forced host devices execute serially and d>1
+does strictly more total work than d=1 (the exchange is extra), so
+those ratios sit below 1.0 by construction — real scaling needs real
+cores, the same caveat ``benchmarks/fig9_scaling.py`` documents for
+its worker sweep.  The gate in scripts/verify.sh
+(``e2e.load_csr_sharded_d4 >= 1.0``) pins the sharded path to the
+baseline axis, which catches genuine work regressions: a
+retrace-per-load bug in the exchange showed up at ~0.14x on this
+metric before being fixed.
+
 ``--quick`` (used by scripts/verify.sh) runs the same pipeline on a
 small graph with repeat=1 so the benchmark code itself cannot rot
 unexecuted.  ``--json OUT.json`` additionally writes machine-readable
@@ -150,6 +172,56 @@ def _mb(path):
     return f"mb={os.path.getsize(path) / 1e6:.2f}"
 
 
+_SHARDED_CODE = """
+import json, sys, time
+import numpy as np, jax
+from repro.core import open_graph
+from repro.core.compat import device_mesh
+from repro.core.distributed import load_csr_sharded_stream
+
+path, v, repeat = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+
+def best_of(fn, repeat):
+    fn()                                  # compile warmup
+    b = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter(); fn(); b = min(b, time.perf_counter() - t0)
+    return b
+
+out = {"stream": best_of(
+    lambda: open_graph(path, engine="device", num_vertices=v).csr(), repeat)}
+for d in (1, 2, 4):
+    mesh = device_mesh(np.array(jax.devices()[:d]), ("data",))
+    out[f"d{d}"] = best_of(
+        lambda: load_csr_sharded_stream(mesh, "data", path, num_vertices=v),
+        repeat)
+print("SHARDED_JSON " + json.dumps(out))
+"""
+
+
+def _sharded_times(path, v, repeat):
+    """(stream, d1, d2, d4) seconds, all measured in one subprocess under
+    ``--xla_force_host_platform_device_count=4`` so the threadpool split
+    is identical across the four timings."""
+    import subprocess
+
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARDED_CODE, path, str(v), str(repeat)],
+        env=env, capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        raise RuntimeError(f"sharded benchmark subprocess failed:\n"
+                           f"{proc.stdout}\n{proc.stderr}")
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("SHARDED_JSON ")][-1]
+    t = json.loads(line[len("SHARDED_JSON "):])
+    return t["stream"], t["d1"], t["d2"], t["d4"]
+
+
 def run(quick: bool = False, json_path: str = None):
     from repro.core import get_engine, open_graph, read_snapshot
 
@@ -218,6 +290,20 @@ def run(quick: bool = False, json_path: str = None):
         f"edges_per_s={e / t_zeager:.3e}")
     row("e2e.load_csr_snapshot_zlib_lazy", t_zlazy, zsnap,
         f"edges_per_s={e / t_zlazy:.3e};vs_eager={t_zeager / t_zlazy:.2f}x")
+    # sharded rows: speedup is vs the batch-roundtrip baseline like every
+    # other row, chained through the same-split streaming re-timing so
+    # the subprocess threadpool split is normalized out (module docstring)
+    t_s1, t_sd1, t_d2, t_d4 = _sharded_times(path, v, repeat)
+    for name, secs in (("e2e.load_csr_sharded_d2", t_d2),
+                       ("e2e.load_csr_sharded_d4", t_d4)):
+        emit(name, secs,
+             f"edges_per_s={e / secs:.3e};"
+             f"vs_stream_same_cfg={t_s1 / secs:.2f}x;"
+             f"vs_sharded_d1={t_sd1 / secs:.2f}x;"
+             f"cores={os.cpu_count()};" + _mb(path))
+        rows.append({"name": name, "seconds": round(secs, 6),
+                     "mb": round(os.path.getsize(path) / 1e6, 3),
+                     "speedup": round((t_old / t_new) * (t_s1 / secs), 2)})
     if json_path:
         with open(json_path, "w") as f:
             json.dump(rows, f, indent=2)

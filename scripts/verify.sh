@@ -9,6 +9,13 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 python -m pytest -x -q "$@"
 
+# multi-device lane: the sharded streaming tests under 4 forced CPU host
+# devices.  (tests/conftest.py pops XLA_FLAGS at import — the device
+# oracle tests run in subprocesses that set their own flag — so this
+# lane's env only pins the host-side tests' view of the platform.)
+JAX_PLATFORMS=cpu XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python -m pytest -q tests/test_sharded_stream.py
+
 # docs: every relative link in README.md / docs/*.md must resolve
 python scripts/check_links.py README.md docs
 
@@ -63,10 +70,14 @@ PY
 
 # perf gate: the streaming engine must never fall back below the batch
 # round-trip (speedup >= 1.0 even on the --quick graph, where fixed
-# costs compress ratios).  Floors only — quick-run speedups are not
+# costs compress ratios), and the sharded streaming load at d=4 must
+# stay on the same baseline axis (its speedup row is normalized through
+# the same-split streaming re-timing; a retrace-per-load regression
+# shows up here at ~0.14x).  Floors only — quick-run speedups are not
 # comparable to the committed full-run rows, so tolerance mode is for
 # full-vs-full diffs across PRs (see scripts/bench_diff.py).
 python scripts/bench_diff.py BENCH_e2e.json /tmp/BENCH_e2e_quick.json \
-    --require-only --require 'e2e.load_csr_streaming>=1.0'
+    --require-only --require 'e2e.load_csr_streaming>=1.0' \
+    --require 'e2e.load_csr_sharded_d4>=1.0'
 
 echo "verify: all green"

@@ -18,7 +18,13 @@ Public API:
     read_edgelist, read_edgelist_numpy   — back-compat engine wrappers
     read_csr, convert_to_csr             — file/EdgeList -> CSR (staged)
     read_mtx, read_mtx_csr, mtx_to_snapshot — MatrixMarket with honored attrs
-    load_csr_sharded, host_shard_and_load — multi-device vertex-partitioned CSR
+    load_csr_sharded_stream, load_csr_sharded, host_shard_and_load
+                                         — multi-device vertex-partitioned CSR;
+                                           the _stream variant shards the file's
+                                           byte ranges so every stage (parse
+                                           included) runs on the mesh
+                                           (GraphSource.csr_sharded(mesh);
+                                           docs/distributed.md)
     tune                                 — measured beta x batch_blocks
                                            autotuning for the streaming
                                            engines (open_graph(tune=True);
@@ -36,7 +42,8 @@ from .snapshot import save_snapshot, read_snapshot, Snapshot, SnapshotError
 from .codecs import (register_codec, get_codec, available_codecs,
                      compress_file_framed, write_framed)
 from .generate import make_graph_file, rmat_edges, uniform_edges, grid_edges, write_edgelist
-from .distributed import load_csr_sharded, host_shard_and_load
+from .distributed import (load_csr_sharded, load_csr_sharded_stream,
+                          host_shard_and_load)
 from . import (baselines, build, codecs, compat, degrees, loader, parse,
                parse_np, blocks, snapshot, source, tune)
 
@@ -53,7 +60,7 @@ __all__ = [
     "read_mtx", "read_mtx_csr", "write_mtx", "mtx_to_snapshot",
     "make_graph_file", "rmat_edges", "uniform_edges", "grid_edges",
     "write_edgelist",
-    "load_csr_sharded", "host_shard_and_load",
+    "load_csr_sharded", "load_csr_sharded_stream", "host_shard_and_load",
     "baselines", "build", "codecs", "compat", "degrees", "loader", "parse",
     "parse_np", "blocks", "snapshot", "source", "tune",
 ]

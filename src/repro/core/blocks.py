@@ -213,6 +213,65 @@ def owned_range(plan: BlockPlan) -> tuple[int, int]:
     return plan.overlap, plan.overlap + plan.beta
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardSpan:
+    """Shard ``shard``-of-``num_shards``'s contiguous slice of a BlockPlan.
+
+    The split is **block-aligned**, which is what makes it safe: a line
+    is owned by the block containing its terminating newline, and a
+    block's left context comes from its own staged ``overlap`` bytes —
+    so any contiguous block range parses exactly the lines it owns, with
+    no coordination with neighbouring shards.  For framed codecs the
+    plan's beta is already forced to ``frame_beta``, so a block-aligned
+    split is frame-aligned for free.
+    """
+
+    plan: BlockPlan
+    shard: int
+    num_shards: int
+    block_lo: int      # first owned block (inclusive)
+    block_hi: int      # past-the-end block; == block_lo for an empty span
+
+    @property
+    def num_blocks(self) -> int:
+        return self.block_hi - self.block_lo
+
+    @property
+    def byte_lo(self) -> int:
+        """First owned file byte (post-header coordinates)."""
+        return min(self.block_lo * self.plan.beta, self.plan.file_len)
+
+    @property
+    def byte_hi(self) -> int:
+        """Past-the-end owned file byte."""
+        return min(self.block_hi * self.plan.beta, self.plan.file_len)
+
+    @property
+    def edge_cap(self) -> int:
+        """Accumulator slots this span needs (over-allocation bound)."""
+        return self.num_blocks * self.plan.edge_cap
+
+
+def shard_plan(plan: BlockPlan, k: int, d: int) -> ShardSpan:
+    """Partition ``plan``'s blocks into ``d`` contiguous byte-range spans
+    and return shard ``k``'s.
+
+    Spans are balanced to within one block, ordered (shard k's bytes all
+    precede shard k+1's — the exchange stage relies on this to keep
+    received edges in global file order), disjoint, and jointly cover
+    every block.  When the mesh is wider than the plan (``d`` >
+    ``num_blocks``) the excess shards get empty spans, which the sharded
+    loader must — and does — handle: their accumulators simply stay
+    empty.
+    """
+    if d < 1:
+        raise ValueError(f"num_shards must be >= 1, got {d}")
+    if not 0 <= k < d:
+        raise ValueError(f"shard index {k} outside [0, {d})")
+    nb = plan.num_blocks
+    return ShardSpan(plan, k, d, (k * nb) // d, ((k + 1) * nb) // d)
+
+
 # ---------------------------------------------------------------------------
 # block sources: where staged block bytes come from
 # ---------------------------------------------------------------------------
@@ -259,24 +318,42 @@ class SequentialBlockSource:
     growing buffer (the old ``bytearray`` design paid an O(buffered)
     memmove per batch to delete its consumed prefix).
 
-    ``finish`` drains the stream and verifies the total produced length
-    against ``length``: a stream that is shorter or longer than declared
-    (truncated file, lying gzip trailer) raises ``ValueError`` instead
-    of returning a silently partial graph.
+    A source may cover only a *span* of the logical stream — the sharded
+    loader gives each mesh shard its own source over its byte range:
+    ``start`` is the post-skip stream position of the first chunk byte
+    (the chunks iterator must begin there — e.g. a frame-sliced framed
+    reader), ``end`` is the past-the-end position this source must cover,
+    and ``first_block`` is the first block id ``stage`` will be asked
+    for.  ``start`` must not exceed ``first_block * beta - overlap`` (the
+    leftmost byte the first staged batch needs); block-aligned spans with
+    a one-block (or one-frame) left margin satisfy this because
+    ``beta > overlap``.
+
+    ``finish`` verifies coverage: a source whose span reaches the stream
+    end (``end == length``) drains the remainder and demands the exact
+    declared total (truncated file, lying gzip trailer); a mid-stream
+    span only demands that the stream reached ``end`` — either way a
+    short stream raises ``ValueError`` instead of returning a silently
+    partial graph.
     """
 
     def __init__(self, chunks, length: int, *, skip: int = 0,
+                 start: int = 0, end: int | None = None,
+                 first_block: int = 0,
                  describe: str = "byte stream", mismatch_hint: str = ""):
         self._chunks = iter(chunks)
         self.length = max(int(length), 0)
         self._to_skip = skip
+        self._start = min(max(int(start), 0), self.length)
+        self._end = self.length if end is None else \
+            min(max(int(end), self._start), self.length)
         self._describe = describe
         self._hint = mismatch_hint
         self._q: list[np.ndarray] = []     # pending chunk views, in order
-        self._q_start = 0              # stream offset of _q[0][0] (post-skip)
+        self._q_start = self._start    # stream offset of _q[0][0] (post-skip)
         self._q_len = 0                # total bytes queued
         self._produced = 0             # post-skip bytes pulled so far
-        self._next_block = 0
+        self._next_block = int(first_block)
 
     def _pull(self) -> bool:
         chunk = next(self._chunks, None)
@@ -342,11 +419,25 @@ class SequentialBlockSource:
         return out
 
     def finish(self) -> None:
-        while self._pull():
-            self._q.clear()           # drained bytes are only counted
-            self._q_len = 0
-        if self._produced != self.length:
-            raise ValueError(
-                f"{self._describe}: stream decompressed to "
-                f"{self._produced} bytes after the header offset, expected "
-                f"{self.length}{self._hint}")
+        need = self._end - self._start
+        if self._end >= self.length:
+            # span reaches the stream end: drain and demand the exact total
+            while self._pull():
+                self._q.clear()       # drained bytes are only counted
+                self._q_len = 0
+            if self._produced != need:
+                raise ValueError(
+                    f"{self._describe}: stream decompressed to "
+                    f"{self._start + self._produced} bytes after the header "
+                    f"offset, expected {self.length}{self._hint}")
+        else:
+            # mid-stream span: only demand that the stream covered it
+            while self._produced < need and self._pull():
+                self._q.clear()
+                self._q_len = 0
+            if self._produced < need:
+                raise ValueError(
+                    f"{self._describe}: stream ended at byte "
+                    f"{self._start + self._produced} (after the header "
+                    f"offset), before this shard span's end at "
+                    f"{self._end}{self._hint}")

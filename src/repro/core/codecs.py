@@ -202,8 +202,18 @@ def compress_frames(data, codec: Codec, *, level: Optional[int] = None,
 
 
 def iter_decompressed_frames(payload, codec: Codec, *,
-                             context: str = "frame stream") -> Iterator[bytes]:
+                             context: str = "frame stream",
+                             start_frame: int = 0,
+                             stop_frame: Optional[int] = None,
+                             ) -> Iterator[bytes]:
     """Yield validated uncompressed frame payloads in order.
+
+    ``start_frame``/``stop_frame`` select a frame range: frames before
+    ``start_frame`` are *walked* (their headers validated, their payloads
+    never decompressed — the frame headers form an implicit seek index),
+    and iteration stops before ``stop_frame``.  The sharded loader uses
+    this to give each mesh shard a decompression stream over only its
+    byte span.
 
     Raises ``ValueError`` on a truncated frame header or payload, a
     declared-length mismatch after decompression, or a CRC32 mismatch —
@@ -211,7 +221,10 @@ def iter_decompressed_frames(payload, codec: Codec, *,
     """
     view = memoryview(payload)
     pos = 0
+    idx = 0
     while pos < len(view):
+        if stop_frame is not None and idx >= stop_frame:
+            return
         if pos + FRAME_HDR_LEN > len(view):
             raise ValueError(
                 f"{context}: truncated frame header at byte {pos} "
@@ -222,8 +235,13 @@ def iter_decompressed_frames(payload, codec: Codec, *,
             raise ValueError(
                 f"{context}: truncated frame payload at byte {pos} "
                 f"({len(view) - pos} of {comp_len} declared bytes)")
+        if idx < start_frame:         # seek: skip the compressed payload
+            pos += comp_len
+            idx += 1
+            continue
         raw = codec.decompress(bytes(view[pos:pos + comp_len]), raw_len)
         pos += comp_len
+        idx += 1
         if len(raw) != raw_len:
             raise ValueError(
                 f"{context}: frame declared {raw_len} uncompressed bytes "
@@ -345,15 +363,20 @@ def read_framed_header(path: str) -> FramedInfo:
                       FRAMED_HDR_LEN)
 
 
-def _framed_chunks(info: FramedInfo) -> Iterator[bytes]:
+def _framed_chunks(info: FramedInfo, start_frame: int = 0,
+                   stop_frame: Optional[int] = None) -> Iterator[bytes]:
     """Sequential frame payloads of a framed file (prefetch-thread fuel).
 
     The whole compressed payload is mmap'd (compressed bytes only —
     small); each ``next()`` decompresses exactly one frame, so the
     consumer controls how far ahead of the parser decompression runs.
+    ``start_frame``/``stop_frame`` restrict the stream to a frame range
+    (frames before the start are header-walked, not decompressed).
     """
     data = mmap_bytes(info.path, info.payload_offset)
-    yield from iter_decompressed_frames(data, info.codec, context=info.path)
+    yield from iter_decompressed_frames(data, info.codec, context=info.path,
+                                        start_frame=start_frame,
+                                        stop_frame=stop_frame)
 
 
 def _gzip_chunks(path: str) -> Iterator[bytes]:
@@ -501,3 +524,77 @@ def open_block_source(path: str, offset: int = 0):
         _framed_chunks(info), info.orig_len - offset, skip=offset,
         describe=f"{path} (framed {info.codec.name})")
     return source, info.frame_beta
+
+
+def stream_geometry(path: str, offset: int = 0) -> Tuple[int, Optional[int]]:
+    """``(uncompressed post-offset length, forced_beta-or-None)`` without
+    opening a block source.
+
+    The sharded loader plans the whole file once (this call), splits the
+    plan into per-shard spans, and only then opens one shard-local block
+    source per span via :func:`open_shard_block_source` — mirroring the
+    geometry :func:`open_block_source` would have produced.
+    """
+    kind = compression_of(path)
+    if kind is None:
+        return max(os.path.getsize(path) - offset, 0), None
+    if kind == "gzip":
+        return max(gzip_length_hint(path) - offset, 0), None
+    info = read_framed_header(path)
+    return max(info.orig_len - offset, 0), info.frame_beta
+
+
+def open_shard_block_source(path: str, plan, span, offset: int = 0):
+    """A block source able to stage exactly ``span``'s blocks of ``plan``.
+
+    ``plan`` must be the plan built from :func:`stream_geometry`'s length
+    (and forced beta, for framed inputs); ``span`` is a
+    ``blocks.ShardSpan`` with at least one block.  Per codec:
+
+    * **raw** — a shared-mmap :class:`MemoryBlockSource`; random access
+      makes any block range free.
+    * **framed** — the frame headers form a seek index: the source's
+      chunk stream starts at the frame containing the span's leftmost
+      needed byte (first owned byte minus ``overlap`` of left context)
+      and stops after the span's last frame.  Frames before the start
+      are header-walked, never decompressed — shard k pays only for its
+      own span's decompression.
+    * **gzip** — DEFLATE streams have no seek index, so each shard
+      decompresses (and discards) the prefix before its span; correct,
+      but prefix-decompression cost grows with the shard index.  Use the
+      framed container when sharded loading speed matters.
+    """
+    if span.num_blocks <= 0:
+        raise ValueError(
+            f"shard {span.shard}/{span.num_shards} owns no blocks; "
+            f"callers skip opening sources for empty spans")
+    kind = compression_of(path)
+    if kind is None:
+        return MemoryBlockSource(mmap_bytes(path, offset))
+    shard_tag = f"shard {span.shard}/{span.num_shards}"
+    if kind == "gzip":
+        start = max(span.block_lo * plan.beta - plan.overlap, 0)
+        end = plan.file_len if span.block_hi >= plan.num_blocks \
+            else min(span.block_hi * plan.beta, plan.file_len)
+        return SequentialBlockSource(
+            _gzip_chunks(path), plan.file_len, skip=offset + start,
+            start=start, end=end, first_block=span.block_lo,
+            describe=f"{path} (gzip, {shard_tag})",
+            mismatch_hint=" (multi-member or >4 GiB gzip? the trailer "
+                          "length is unreliable there — recompress with "
+                          "repro.core.codecs.compress_file_framed, or use "
+                          "a host engine: numpy/threads)")
+    info = read_framed_header(path)
+    fb = info.frame_beta
+    # pre-offset byte range the span needs: its blocks plus left context
+    start_pre = max(span.block_lo * plan.beta - plan.overlap, 0) + offset
+    end_pre = min(span.block_hi * plan.beta + offset, info.orig_len)
+    frame_lo = min(start_pre // fb, max(info.frame_count - 1, 0))
+    frame_hi = max(min(-(-end_pre // fb), info.frame_count), frame_lo)
+    start = max(frame_lo * fb - offset, 0)
+    return SequentialBlockSource(
+        _framed_chunks(info, frame_lo, frame_hi), plan.file_len,
+        skip=max(offset - frame_lo * fb, 0),
+        start=start, end=max(end_pre - offset, start),
+        first_block=span.block_lo,
+        describe=f"{path} (framed {info.codec.name}, {shard_tag})")

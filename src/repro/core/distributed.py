@@ -37,6 +37,21 @@ from .types import CSR
 I32 = jnp.int32
 
 
+def _cap_round(n: int) -> int:
+    """Smallest value in ``{2**k, 3 * 2**(k-1)}`` that is >= max(n, 1).
+
+    A half-step power-of-two ladder: measured capacities (send buckets,
+    valid-edge bounds) are rounded up to one of two sizes per octave, so
+    buffers stay within 1.5x of the real need — a pure pow2 round-up
+    wastes up to 2x, and on the exchange path that waste is sorted and
+    scanned — while the number of distinct compiled programs stays
+    bounded."""
+    n = max(int(n), 1)
+    p = 1 << (n - 1).bit_length()
+    h = (3 * p) // 4
+    return h if h >= n else p
+
+
 def _owner(vid: jax.Array, rows_per_shard: int) -> jax.Array:
     return jnp.clip(vid // rows_per_shard, 0, None)
 
@@ -50,42 +65,59 @@ def exchange_by_owner(
     rows_per_shard: int,
     axis: str,
     send_cap: int,
-) -> Tuple[jax.Array, jax.Array, Optional[jax.Array], jax.Array]:
+) -> Tuple[jax.Array, jax.Array, Optional[jax.Array], jax.Array, jax.Array]:
     """Shard-local body: bucket edges by owner shard and all_to_all them.
 
     Inputs are this shard's fixed-capacity edge buffers (src == -1 pads).
     ``send_cap`` is the per-(shard,shard) bucket capacity — GVEL-style
     over-allocation so the exchange is a single dense collective.
-    Returns receive buffers of shape (num_shards * send_cap,).
+    Returns ``(rcv_src, rcv_dst, rcv_w, count, overflow)``: receive
+    buffers of shape (num_shards * send_cap,), the count of valid
+    received edges, and the number of *this shard's* edges that did not
+    fit their bucket.  A nonzero overflow means the exchange lost edges
+    — callers must surface it (``load_csr_sharded`` raises), never
+    return the truncated CSR.
+
+    The bucketing is stable: edge i's within-bucket rank is the number
+    of earlier edges with the same owner (a cumulative count, no sort),
+    so within a bucket edges keep their order in ``src``.  Combined
+    with ``all_to_all``'s sender-major receive layout, a shard that
+    owns byte ranges in shard order receives its edges in global file
+    order — which is what lets the sharded CSR match the host oracle
+    bitwise, not just as sets.  (An earlier version bucketed via a
+    stable argsort-by-owner; the cumulative count computes the same
+    slots in O(e * num_shards) streaming passes instead of an
+    O(e log e) sort, and skips the three gathers.)
     """
-    e = src.shape[0]
     owner = jnp.where(src >= 0, _owner(src, rows_per_shard), num_shards)
-    # stable bucket: sort by owner, then compute within-bucket rank
-    order = jnp.argsort(owner, stable=True)
-    so, ss, sd = owner[order], src[order], dst[order]
-    sw = w[order] if w is not None else None
-    first = jnp.searchsorted(so, jnp.arange(num_shards + 1, dtype=I32), side="left")
-    rank = jnp.arange(e, dtype=I32) - first[jnp.clip(so, 0, num_shards)]
-    # scatter into (num_shards, send_cap) send buffers; overflow dropped —
-    # callers size send_cap from a bytes bound so this cannot trigger.
-    slot = jnp.where((so < num_shards) & (rank < send_cap),
-                     so * send_cap + rank, num_shards * send_cap)
+    oh = (owner[:, None] ==
+          jnp.arange(num_shards, dtype=I32)[None, :]).astype(I32)
+    rank = jnp.take_along_axis(
+        jnp.cumsum(oh, axis=0),
+        jnp.clip(owner, 0, num_shards - 1)[:, None].astype(I32),
+        axis=1)[:, 0] - 1
+    # scatter into (num_shards, send_cap) send buffers; bucket overflow
+    # cannot be stored (the collective is dense), so it is *counted* and
+    # returned for the caller to raise on
+    keep = (owner < num_shards) & (rank < send_cap)
+    overflow = jnp.sum((owner < num_shards) & (rank >= send_cap), dtype=I32)
+    slot = jnp.where(keep, owner * send_cap + rank, num_shards * send_cap)
     buf = num_shards * send_cap
 
     def fill(vals, pad, dtype):
         return jnp.full((buf,), pad, dtype).at[slot].set(
             vals.astype(dtype), mode="drop")
 
-    snd_src = fill(ss, -1, I32).reshape(num_shards, send_cap)
-    snd_dst = fill(sd, -1, I32).reshape(num_shards, send_cap)
+    snd_src = fill(src, -1, I32).reshape(num_shards, send_cap)
+    snd_dst = fill(dst, -1, I32).reshape(num_shards, send_cap)
     rcv_src = jax.lax.all_to_all(snd_src, axis, 0, 0, tiled=False).reshape(-1)
     rcv_dst = jax.lax.all_to_all(snd_dst, axis, 0, 0, tiled=False).reshape(-1)
     rcv_w = None
     if w is not None:
-        snd_w = fill(sw, 0.0, jnp.float32).reshape(num_shards, send_cap)
+        snd_w = fill(w, 0.0, jnp.float32).reshape(num_shards, send_cap)
         rcv_w = jax.lax.all_to_all(snd_w, axis, 0, 0, tiled=False).reshape(-1)
     count = jnp.sum(rcv_src >= 0, dtype=I32)
-    return rcv_src, rcv_dst, rcv_w, count
+    return rcv_src, rcv_dst, rcv_w, count, overflow
 
 
 def build_local_csr(
@@ -115,6 +147,7 @@ def load_csr_sharded(
     num_vertices: int,
     rho: int = 4,
     send_cap: Optional[int] = None,
+    edge_limit: Optional[int] = None,
 ) -> CSR:
     """Edge buffers (sharded on `axis`) -> vertex-partitioned global CSR.
 
@@ -122,35 +155,288 @@ def load_csr_sharded(
     across the data axis (each shard parsed its own file range).  Output
     offsets/targets are sharded on `axis`: shard k owns rows
     [k*rows, (k+1)*rows).
+
+    ``send_cap`` defaults to the worst case (every local edge owned by
+    one shard); :func:`load_csr_sharded_stream` sizes it from measured
+    per-bucket counts instead.  If any shard's bucket overflows
+    ``send_cap`` the exchange cannot carry every edge — this raises
+    ``ValueError`` rather than returning a CSR with silently dropped
+    edges.
+
+    ``edge_limit`` is a static per-shard bound on valid edges: the fused
+    accumulators pack valid edges at the buffer prefix, so slicing each
+    shard's buffers to a bound >= every shard's valid-edge count is
+    lossless and keeps the bucketing scan off the padding tail.  Callers
+    who pass it are responsible for the bound (edges past it are never
+    examined); ``load_csr_sharded_stream`` derives it from the measured
+    per-shard counts.
     """
     d = mesh.shape[axis]
-    rows = -(-num_vertices // d)
+    rows = max(-(-num_vertices // d), 1)
     e_per = src.shape[0] // d
     if send_cap is None:
         send_cap = e_per  # worst case: every local edge goes to one owner
+    lim = e_per if edge_limit is None else max(min(int(edge_limit), e_per), 1)
 
     weighted = w is not None
+    fn = _exchange_build_fn(mesh, axis, d, rows, int(send_cap), rho,
+                            weighted, lim)
+    win = w if weighted else jnp.zeros((), jnp.float32)
+    off, tgt, tw, ovf = fn(src, dst, win)
+    ovf_h = np.asarray(ovf)
+    if ovf_h.sum():
+        raise ValueError(
+            f"exchange_by_owner overflow: {int(ovf_h.sum())} edge(s) "
+            f"(worst shard: {int(ovf_h.max())}) did not fit their "
+            f"per-owner bucket at send_cap={send_cap}; the exchange "
+            f"would drop them.  Raise send_cap (worst case: the per-shard "
+            f"buffer capacity {e_per}) or let load_csr_sharded_stream "
+            f"measure it from the real bucket counts.")
+    return CSR(off, tgt, tw if weighted else None, num_vertices, row_start=0)
+
+
+@functools.lru_cache(maxsize=64)
+def _exchange_build_fn(mesh: Mesh, axis: str, d: int, rows: int,
+                       send_cap: int, rho: int, weighted: bool,
+                       edge_limit: Optional[int] = None):
+    """The jitted exchange+build program for one (mesh, geometry) combo.
+
+    shard_map over a fresh closure defeats jax's jit cache (new function
+    identity every call -> retrace + recompile per load); memoizing the
+    wrapped callable on the static configuration restores one-compile-
+    per-geometry behavior, same as the module-level jitted parse
+    programs on the single-device path."""
+
+    lim = slice(None) if edge_limit is None else slice(None, edge_limit)
 
     def body(s, dd, ww):
-        s, dd = s.reshape(-1), dd.reshape(-1)
-        ww = ww.reshape(-1) if weighted else None
-        rs, rd, rw, _ = exchange_by_owner(
+        s, dd = s.reshape(-1)[lim], dd.reshape(-1)[lim]
+        ww = ww.reshape(-1)[lim] if weighted else None
+        rs, rd, rw, _, ovf = exchange_by_owner(
             s, dd, ww, num_shards=d, rows_per_shard=rows,
             axis=axis, send_cap=send_cap)
         off, tgt, tw = build_local_csr(rs, rd, rw, rows_per_shard=rows,
                                        axis=axis, rho=rho)
         if tw is None:
             tw = jnp.zeros_like(tgt, jnp.float32)
-        return off[None], tgt[None], tw[None]
+        return off[None], tgt[None], tw[None], ovf[None]
 
     specs = P(axis)
     in_specs = (specs, specs, specs if weighted else P())
-    out_specs = (P(axis), P(axis), P(axis))
-    fn = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs)
-    win = w if weighted else jnp.zeros((), jnp.float32)
-    off, tgt, tw = fn(src, dst, win)
-    return CSR(off, tgt, tw if weighted else None, num_vertices, row_start=0)
+    out_specs = (P(axis), P(axis), P(axis), P(axis))
+    return jax.jit(compat.shard_map(body, mesh=mesh, in_specs=in_specs,
+                                    out_specs=out_specs))
+
+
+def _shard_devices(mesh: Mesh, axis: str, e_per: int):
+    """Per-shard device placement for a length-``d*e_per`` array sharded
+    on ``axis``: ``(sharding, groups)`` where ``groups[k]`` is the list
+    of devices holding shard k's slice (one primary first; extras only
+    when the mesh has other axes, which replicate the slice)."""
+    d = mesh.shape[axis]
+    sharding = NamedSharding(mesh, P(axis))
+    devmap = sharding.addressable_devices_indices_map((d * e_per,))
+    by_start: dict = {}
+    for dev, idx in devmap.items():
+        by_start.setdefault(idx[0].start or 0, []).append(dev)
+    groups = [sorted(by_start[s], key=lambda dv: dv.id)
+              for s in sorted(by_start)]
+    if len(groups) != d:
+        raise ValueError(
+            f"axis {axis!r} of mesh {mesh} yields {len(groups)} distinct "
+            f"shard slices, expected {d}")
+    return sharding, groups
+
+
+def stream_shards(
+    mesh: Mesh,
+    axis: str,
+    path: str,
+    *,
+    weighted: bool = False,
+    base: int = 1,
+    offset: int = 0,
+    beta: Optional[int] = None,
+    overlap: Optional[int] = None,
+    batch_blocks: Optional[int] = None,
+    parse: str = "xla",
+) -> Tuple[jax.Array, jax.Array, Optional[jax.Array], list, int]:
+    """Stage 0, streamed: every shard parses its own byte range of the
+    file through the fused donated pipeline, on its own device.
+
+    The file's ``BlockPlan`` is split into ``d`` block-aligned byte
+    spans (:func:`repro.core.blocks.shard_plan` — line ownership makes
+    block-aligned splits safe, and framed codecs force ``beta`` to the
+    frame size so the split is frame-aligned too).  Each shard gets its
+    own block source over only its span (raw: shared mmap; framed:
+    frame-index seek; gzip: prefix skip) and runs the same staged →
+    fused ``parse_accumulate`` loop as the single-host streaming engine,
+    with its accumulators *committed to its mesh device* — one worker
+    thread per shard stages host bytes while its device parses, and the
+    d device pipelines run concurrently.
+
+    Returns ``(src, dst, w, counts, max_vertex_id)``: global arrays of
+    ``d * e_per`` slots sharded on ``axis`` (assembled from the
+    per-device accumulators without any host round-trip), the per-shard
+    valid-edge counts, and the maximum vertex id seen (-1 when empty).
+    """
+    from concurrent.futures import ThreadPoolExecutor
+
+    from . import codecs, loader, parse as parse_mod
+    from .blocks import plan_blocks, shard_plan
+
+    d = mesh.shape[axis]
+    beta = loader.DEFAULT_BETA if beta is None else beta
+    overlap = loader.DEFAULT_OVERLAP if overlap is None else overlap
+    batch_blocks = (loader.DEFAULT_BATCH_BLOCKS if batch_blocks is None
+                    else batch_blocks)
+    length, forced_beta = codecs.stream_geometry(path, offset)
+    if forced_beta is not None and forced_beta > overlap:
+        beta = forced_beta
+    plan = plan_blocks(length, beta=beta, overlap=overlap)
+    spans = [shard_plan(plan, k, d) for k in range(d)]
+    # uniform per-shard capacity (the exchange needs equal-sized shards);
+    # spans are balanced to within one block, so the padding this costs
+    # over exact per-span caps is at most one block's edge_cap per shard
+    e_per = max(max(s.num_blocks for s in spans), 1) * plan.edge_cap
+    loader._guard_int32_cap(path, e_per)
+    sharding, groups = _shard_devices(mesh, axis, e_per)
+
+    def load_one(k: int):
+        span, dev = spans[k], groups[k][0]
+        if span.num_blocks == 0:
+            # mesh wider than the plan: an empty, still device-resident
+            # accumulator (all padding) — the exchange handles it
+            return parse_mod.make_accumulators(
+                e_per, weighted=weighted, device=dev)
+        source = codecs.open_shard_block_source(path, plan, span, offset)
+        out = loader._parse_span(
+            source, plan, span.block_lo, span.block_hi, weighted=weighted,
+            base=base, batch_blocks=batch_blocks, parse=parse, cap=e_per,
+            device=dev, prefetch=False)
+        source.finish()
+        return out
+
+    if d == 1:
+        parts = [load_one(0)]
+    else:
+        with ThreadPoolExecutor(d, thread_name_prefix="shard-load") as pool:
+            parts = list(pool.map(load_one, range(d)))
+
+    counts = [int(t) for (_, _, _, t) in parts]
+    max_id = -1
+    for s, dd, _, _ in parts:
+        max_id = max(max_id, int(jnp.maximum(jnp.max(s, initial=-1),
+                                             jnp.max(dd, initial=-1))))
+
+    def assemble(per_shard):
+        arrays = []
+        for k, devs in enumerate(groups):
+            arrays.append(per_shard[k])
+            # replicated slices (other mesh axes): device-to-device copies
+            arrays.extend(jax.device_put(per_shard[k], dev)
+                          for dev in devs[1:])
+        return jax.make_array_from_single_device_arrays(
+            (d * e_per,), sharding, arrays)
+
+    src = assemble([p[0] for p in parts])
+    dst = assemble([p[1] for p in parts])
+    w = assemble([p[2] for p in parts]) if weighted else None
+    return src, dst, w, counts, max_id
+
+
+def bucket_histogram(
+    mesh: Mesh,
+    axis: str,
+    src: jax.Array,
+    *,
+    num_shards: int,
+    rows_per_shard: int,
+    edge_limit: Optional[int] = None,
+) -> np.ndarray:
+    """(sender, owner) edge counts over the sharded ``src`` buffers —
+    the real bucket sizes the exchange will see.  One shard-local
+    scatter-add per shard (runs on each shard's device); the (d, d)
+    result is tiny and lands on the host, where
+    :func:`load_csr_sharded_stream` sizes ``send_cap`` from its peak.
+    ``edge_limit`` bounds the scan as in :func:`load_csr_sharded`."""
+    fn = _bucket_histogram_fn(mesh, axis, num_shards, rows_per_shard,
+                              edge_limit)
+    return np.asarray(fn(src))
+
+
+@functools.lru_cache(maxsize=64)
+def _bucket_histogram_fn(mesh: Mesh, axis: str, num_shards: int,
+                         rows_per_shard: int,
+                         edge_limit: Optional[int] = None):
+    """Jitted histogram body, memoized for the same reason as
+    :func:`_exchange_build_fn`."""
+    lim = slice(None) if edge_limit is None else slice(None, edge_limit)
+
+    def body(s):
+        s = s.reshape(-1)[lim]
+        owner = jnp.minimum(
+            jnp.where(s >= 0, _owner(s, rows_per_shard), num_shards),
+            num_shards)
+        cnt = jnp.zeros((num_shards + 1,), I32).at[owner].add(1)
+        return cnt[None, :num_shards]
+
+    return jax.jit(compat.shard_map(body, mesh=mesh, in_specs=P(axis),
+                                    out_specs=P(axis)))
+
+
+def load_csr_sharded_stream(
+    mesh: Mesh,
+    axis: str,
+    path: str,
+    *,
+    num_vertices: Optional[int] = None,
+    weighted: bool = False,
+    base: int = 1,
+    rho: int = 4,
+    offset: int = 0,
+    send_cap: Optional[int] = None,
+    parse: str = "xla",
+    beta: Optional[int] = None,
+    overlap: Optional[int] = None,
+    batch_blocks: Optional[int] = None,
+) -> CSR:
+    """File -> vertex-partitioned global CSR, every stage sharded.
+
+    The end-to-end four-stage pipeline: :func:`stream_shards` (stage 0,
+    per-device fused parse of per-shard byte ranges), then the
+    psum / all_to_all / local-build stages of :func:`load_csr_sharded`.
+    No host detour: parsed edges stay on their devices from accumulator
+    to CSR.
+
+    ``send_cap=None`` sizes the exchange from *measured* per-bucket
+    counts (:func:`bucket_histogram`, rounded up on the half-step
+    ladder of :func:`_cap_round` to bound recompiles) instead of the
+    worst-case ``e_per`` — receive buffers and the local sort shrink
+    from O(E) to O(E/d) per shard on well-spread graphs.  The same
+    ladder bounds the valid-edge prefix each shard scans
+    (``edge_limit`` from the measured per-shard counts), so neither the
+    bucketing nor the histogram ever touches the capacity padding.
+    Overflow is still detected and raised, so a hand-passed
+    ``send_cap`` can never silently drop edges.
+    """
+    src, dst, w, counts, max_id = stream_shards(
+        mesh, axis, path, weighted=weighted, base=base, offset=offset,
+        beta=beta, overlap=overlap, batch_blocks=batch_blocks, parse=parse)
+    if num_vertices is None:
+        num_vertices = max_id + 1
+    d = mesh.shape[axis]
+    rows = max(-(-num_vertices // d), 1)
+    e_per = src.shape[0] // d
+    edge_limit = min(e_per, _cap_round(max(counts, default=0)))
+    if send_cap is None:
+        peak = int(bucket_histogram(mesh, axis, src, num_shards=d,
+                                    rows_per_shard=rows,
+                                    edge_limit=edge_limit).max())
+        send_cap = _cap_round(peak)
+    return load_csr_sharded(mesh, axis, src, dst, w,
+                            num_vertices=num_vertices, rho=rho,
+                            send_cap=send_cap, edge_limit=edge_limit)
 
 
 def host_shard_and_load(
@@ -163,29 +449,15 @@ def host_shard_and_load(
     base: int = 1,
     rho: int = 4,
 ) -> CSR:
-    """Convenience end-to-end: parse the file in D host chunks (stage 0),
-    place each chunk on its shard, then run the distributed build."""
-    from . import parse_np
-    d = mesh.shape[axis]
-    data = np.memmap(path, dtype=np.uint8, mode="r")
-    bounds = parse_np.chunk_bounds(data, d)
-    while len(bounds) < d:
-        bounds.append((len(data), len(data)))
-    parts = [parse_np.parse_chunk_np(np.asarray(data[lo:hi]),
-                                     weighted=weighted, base=base)
-             for lo, hi in bounds]
-    cap = max(max(p[3] for p in parts), 1)
-    srcb = np.full((d, cap), -1, np.int32)
-    dstb = np.full((d, cap), -1, np.int32)
-    wb = np.zeros((d, cap), np.float32)
-    for k, (s, dd, ww, c) in enumerate(parts):
-        srcb[k, :c] = s
-        dstb[k, :c] = dd
-        if weighted:
-            wb[k, :c] = ww
-    sharding = NamedSharding(mesh, P(axis))
-    srcj = jax.device_put(srcb.reshape(d * cap), sharding)
-    dstj = jax.device_put(dstb.reshape(d * cap), sharding)
-    wj = jax.device_put(wb.reshape(d * cap), sharding) if weighted else None
-    return load_csr_sharded(mesh, axis, srcj, dstj, wj,
-                            num_vertices=num_vertices, rho=rho)
+    """Compatibility wrapper: the historical end-to-end entry point.
+
+    This used to parse every chunk sequentially on the host with the
+    numpy parser and ``device_put`` capacity-sized buffers per shard;
+    it is now a thin alias for :func:`load_csr_sharded_stream`, which
+    streams each shard's byte range through the fused device parse.
+    Prefer ``GraphSource.csr_sharded(mesh)`` or
+    :func:`load_csr_sharded_stream` directly.
+    """
+    return load_csr_sharded_stream(
+        mesh, axis, path, num_vertices=num_vertices, weighted=weighted,
+        base=base, rho=rho)

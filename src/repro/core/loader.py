@@ -73,6 +73,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import build
+from . import parse as parse_mod
 from .blocks import StagingArena, flat_len, owned_range, plan_blocks
 from .parse import donation_supported, parse_accumulate
 from .types import CSR, EdgeList
@@ -251,6 +252,98 @@ def _accumulate_batch(acc_src, acc_dst, acc_w, total, src_b, dst_b, w_b,
         acc_src, acc_dst, acc_w, total, src_b, dst_b, w_b, counts, cap=cap)
 
 
+def _guard_int32_cap(path: str, cap: int) -> None:
+    """Scatter destinations are int32 (jax default dtype regime); a
+    wrapped index would silently drop edges via mode="drop", so refuse
+    loudly instead."""
+    if cap > np.iinfo(np.int32).max:
+        raise ValueError(
+            f"{path}: edge capacity {cap} exceeds int32 indexing for the "
+            f"streaming engine; use engine='numpy'/'threads' or shard the "
+            f"file (load_csr_sharded)")
+
+
+def _parse_span(
+    source,
+    plan,
+    block_lo: int,
+    block_hi: int,
+    *,
+    weighted: bool,
+    base: int,
+    batch_blocks: int,
+    parse: str,
+    cap: int,
+    device=None,
+    prefetch: bool = True,
+) -> DeviceEdges:
+    """Stage and fused-parse blocks ``[block_lo, block_hi)`` of ``plan``
+    from ``source`` into fresh packed accumulators of ``cap`` slots.
+
+    The single-span streaming loop shared by :func:`_stream_edges`
+    (whole file, ``prefetch=True``) and the sharded loader
+    (:mod:`repro.core.distributed`, one call per mesh shard's byte
+    range).  ``device`` commits the accumulators — and every staged
+    batch — to one device, so the donated parse chain executes there;
+    ``prefetch=False`` stages inline instead of spawning a prefetch
+    thread (the sharded loader's callers *are* per-shard threads:
+    inline staging of batch i+1 already overlaps the async-dispatched
+    device parse of batch i, without d extra threads).
+    """
+    os_, oe = owned_range(plan)
+    edge_cap = plan.edge_cap
+    nspan = max(block_hi - block_lo, 0)
+    num_batches = -(-nspan // batch_blocks)
+    acc_src, acc_dst, acc_w, total = parse_mod.make_accumulators(
+        cap, weighted=weighted, device=device)
+    if num_batches == 0:
+        return acc_src, acc_dst, acc_w, total
+
+    def put(x):
+        return jnp.asarray(x) if device is None else jax.device_put(x, device)
+
+    arena = StagingArena(flat_len(min(batch_blocks, nspan), plan))
+
+    def stage(i: int) -> np.ndarray:
+        start = block_lo + i * batch_blocks
+        ids = np.arange(start, min(start + batch_blocks, block_hi))
+        return source.stage(plan, ids, arena=arena, check_lines=True)
+
+    ostart = put(np.full((batch_blocks,), os_, np.int32))
+    oend = put(np.full((batch_blocks,), oe, np.int32))
+
+    def consume(i: int, bufs: np.ndarray) -> None:
+        nonlocal acc_src, acc_dst, acc_w, total
+        nb = bufs.shape[0]          # < batch_blocks on the tail batch
+        if parse == "pallas":
+            from ..kernels import parse_edges
+            src_b, dst_b, w_b, counts = parse_edges(
+                put(bufs), os_, oe, weighted=weighted, base=base,
+                edge_cap=edge_cap)
+            acc_src, acc_dst, acc_w, total = _accumulate_batch(
+                acc_src, acc_dst, acc_w, total, src_b, dst_b, w_b,
+                counts, cap=cap)
+        else:
+            acc_src, acc_dst, acc_w, total = parse_accumulate(
+                acc_src, acc_dst, acc_w, total, put(bufs),
+                ostart[:nb], oend[:nb], weighted=weighted, base=base,
+                edge_bound=nb * edge_cap)
+
+    if prefetch:
+        with ThreadPoolExecutor(
+                1, thread_name_prefix="loader-prefetch") as pool:
+            fut = pool.submit(stage, 0)
+            for i in range(num_batches):
+                bufs = fut.result()
+                if i + 1 < num_batches:
+                    fut = pool.submit(stage, i + 1)     # double buffer
+                consume(i, bufs)
+    else:
+        for i in range(num_batches):
+            consume(i, stage(i))
+    return acc_src, acc_dst, acc_w, total
+
+
 def _stream_edges(
     path: str,
     *,
@@ -289,9 +382,6 @@ def _stream_edges(
     if forced_beta is not None and forced_beta > overlap:
         beta = forced_beta
     plan = plan_blocks(source.length, beta=beta, overlap=overlap)
-    os_, oe = owned_range(plan)
-    edge_cap = plan.edge_cap
-    num_batches = -(-plan.num_blocks // batch_blocks)
     # GVEL over-allocation: a bytes-derived bound on the final edge count
     # (~file_len/4 slots).  This trades device memory (~1 int32 per file
     # byte across src+dst) for a single allocation and in-place (donated)
@@ -300,54 +390,15 @@ def _stream_edges(
     # item (ROADMAP.md).  Because batches are trimmed (never padded), the
     # per-batch windows tile [0, cap) exactly and the running offset can
     # never push a window past the end.
-    cap = plan.num_blocks * edge_cap
-    if cap > np.iinfo(np.int32).max:
-        # Scatter destinations are int32 (jax default dtype regime); a
-        # wrapped index would silently drop edges via mode="drop", so
-        # refuse loudly instead.
-        raise ValueError(
-            f"{path}: edge capacity {cap} exceeds int32 indexing for the "
-            f"streaming engine; use engine='numpy'/'threads' or shard the "
-            f"file (load_csr_sharded)")
-
-    arena = StagingArena(flat_len(min(batch_blocks, plan.num_blocks), plan))
-
-    def stage(i: int) -> np.ndarray:
-        start = i * batch_blocks
-        ids = np.arange(start, min(start + batch_blocks, plan.num_blocks))
-        return source.stage(plan, ids, arena=arena, check_lines=True)
-
-    acc_src = jnp.full((cap,), -1, I32)
-    acc_dst = jnp.full((cap,), -1, I32)
-    acc_w = jnp.zeros((cap,), jnp.float32) if weighted else None
-    total = jnp.zeros((), I32)
-    ostart = jnp.full((batch_blocks,), os_, I32)
-    oend = jnp.full((batch_blocks,), oe, I32)
-
-    with ThreadPoolExecutor(1, thread_name_prefix="loader-prefetch") as pool:
-        fut = pool.submit(stage, 0)
-        for i in range(num_batches):
-            bufs = fut.result()
-            if i + 1 < num_batches:
-                fut = pool.submit(stage, i + 1)     # double buffer
-            nb = bufs.shape[0]          # < batch_blocks on the tail batch
-            if parse == "pallas":
-                from ..kernels import parse_edges
-                src_b, dst_b, w_b, counts = parse_edges(
-                    jnp.asarray(bufs), os_, oe, weighted=weighted, base=base,
-                    edge_cap=edge_cap)
-                acc_src, acc_dst, acc_w, total = _accumulate_batch(
-                    acc_src, acc_dst, acc_w, total, src_b, dst_b, w_b,
-                    counts, cap=cap)
-            else:
-                acc_src, acc_dst, acc_w, total = parse_accumulate(
-                    acc_src, acc_dst, acc_w, total, jnp.asarray(bufs),
-                    ostart[:nb], oend[:nb], weighted=weighted, base=base,
-                    edge_bound=nb * edge_cap)
+    cap = plan.num_blocks * plan.edge_cap
+    _guard_int32_cap(path, cap)
+    edges = _parse_span(source, plan, 0, plan.num_blocks, weighted=weighted,
+                        base=base, batch_blocks=batch_blocks, parse=parse,
+                        cap=cap)
     # A stream shorter/longer than its header declared (truncated file,
     # lying gzip trailer) must fail here, not return a partial graph.
     source.finish()
-    return (acc_src, acc_dst, acc_w, total), cap
+    return edges, cap
 
 
 def _device_num_vertices(src: jax.Array, dst: jax.Array) -> int:
@@ -422,7 +473,7 @@ def _register_builtin_engines() -> None:
 # engine-call implementations (shared by GraphSource and the wrappers)
 # ---------------------------------------------------------------------------
 
-def resolve_tuned(opts: LoadOptions) -> LoadOptions:
+def resolve_tuned(opts: LoadOptions, *, shards: int = 1) -> LoadOptions:
     """Fill un-pinned streaming block geometry from the measured
     per-host profile when ``opts.tune`` is set.
 
@@ -430,7 +481,10 @@ def resolve_tuned(opts: LoadOptions) -> LoadOptions:
     tuning is a no-op for host/snapshot engines.  Explicit ``engine_kw``
     values always win over the profile (pin one, tune the other).  The
     first tuned load on a host runs the measurement sweep and caches it
-    (:func:`repro.core.tune.tuned_geometry`).
+    (:func:`repro.core.tune.tuned_geometry`).  ``shards`` selects the
+    per-shard-count profile slot for the sharded streaming path — d
+    concurrent parse pipelines over 1/d of the bytes have a different
+    throughput knee than one pipeline over all of them.
     """
     if not opts.tune or not isinstance(_REGISTRY.get(opts.engine),
                                        _StreamingEngine):
@@ -439,7 +493,7 @@ def resolve_tuned(opts: LoadOptions) -> LoadOptions:
     if "beta" in kw and "batch_blocks" in kw:
         return opts
     from .tune import tuned_geometry
-    g = tuned_geometry(weighted=bool(opts.weighted))
+    g = tuned_geometry(weighted=bool(opts.weighted), shards=int(shards))
     kw.setdefault("beta", g["beta"])
     kw.setdefault("batch_blocks", g["batch_blocks"])
     return opts.replace(engine_kw=kw)
@@ -511,6 +565,39 @@ def read_csr_via(path: str, opts: LoadOptions, *, method: str = "staged",
           else read_edgelist_via(path, opts))
     return convert_to_csr(el, method=method, rho=rho,
                           engine=csr_convert_engine(opts.engine))
+
+
+def read_csr_sharded_via(path: str, opts: LoadOptions, *, mesh,
+                         axis: str = "data", rho: int = 4) -> CSR:
+    """File -> mesh-sharded CSR through ``opts.engine`` (must be a
+    streaming engine — the byte-range shard plan only exists for the
+    block streaming pipeline).
+
+    Expands ``LoadOptions`` onto :func:`repro.core.distributed.
+    load_csr_sharded_stream`: each mesh shard along ``axis`` streams its
+    own byte span of the file through the fused parse pipeline and the
+    packed per-shard edges feed the degree-psum / all_to_all / local
+    CSR build with no host detour.  ``tune=True`` resolves against the
+    per-shard-count profile slot.
+    """
+    if axis not in dict(getattr(mesh, "shape", {})):
+        raise ValueError(f"mesh has no axis {axis!r} "
+                         f"(axes: {tuple(dict(mesh.shape))})")
+    opts = resolve_tuned(opts, shards=int(mesh.shape[axis]))
+    if opts.symmetric:
+        raise ValueError(
+            "sharded streaming load does not support symmetric=True "
+            "(reverse-edge expansion is a host concatenation; load the "
+            "CSR unsharded or pre-symmetrize the file)")
+    eng = get_engine(opts.engine)
+    if not isinstance(eng, _StreamingEngine):
+        raise ValueError(
+            f"engine {opts.engine!r} has no sharded streaming path; use a "
+            f"streaming engine ('device' or 'pallas')")
+    from . import distributed
+    return distributed.load_csr_sharded_stream(
+        mesh, axis, path, num_vertices=opts.num_vertices, rho=rho,
+        parse=eng._parse, **opts.stream_kwargs())
 
 
 # ---------------------------------------------------------------------------

@@ -53,6 +53,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 I32 = jnp.int32
 
@@ -391,3 +392,28 @@ def parse_accumulate(acc_src, acc_dst, acc_w, total, bufs, owned_start,
         acc_src, acc_dst, acc_w, total, bufs, owned_start, owned_end,
         weighted=weighted, base=base, edge_bound=edge_bound,
         max_digits=max_digits)
+
+
+def make_accumulators(cap: int, *, weighted: bool, device=None):
+    """Fresh packed edge accumulators: ``(src=-1, dst=-1, w=0, total=0)``.
+
+    The one place the accumulator layout (padding values, dtypes) is
+    written down — the streaming loader, the tuner's measurement pass,
+    and the sharded loader all start from here.  ``device`` commits the
+    buffers to a specific device: jit follows committed inputs, so the
+    whole donated parse+accumulate chain then runs on that device (the
+    sharded loader places shard k's accumulators on mesh device k and
+    the per-shard parses execute concurrently with no cross-device
+    traffic).
+    """
+    cap = max(int(cap), 1)
+    acc_src = np.full((cap,), -1, np.int32)
+    acc_dst = np.full((cap,), -1, np.int32)
+    acc_w = np.zeros((cap,), np.float32) if weighted else None
+    total = np.zeros((), np.int32)
+    if device is None:
+        return (jnp.asarray(acc_src), jnp.asarray(acc_dst),
+                jnp.asarray(acc_w) if weighted else None, jnp.asarray(total))
+    put = functools.partial(jax.device_put, device=device)
+    return (put(acc_src), put(acc_dst), put(acc_w) if weighted else None,
+            put(total))

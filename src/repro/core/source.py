@@ -47,7 +47,8 @@ from typing import Any, Dict, Optional, Tuple
 
 from .loader import (DEFAULT_CSR_ENGINE, DEFAULT_EDGELIST_ENGINE, LoadOptions,
                      available_engines, csr_convert_engine, get_engine,
-                     read_csr_via, read_edgelist_via, resolve_tuned)
+                     read_csr_sharded_via, read_csr_via, read_edgelist_via,
+                     resolve_tuned)
 from .types import CSR, EdgeList
 
 FORMAT_GVEL = "gvel"
@@ -144,6 +145,7 @@ class GraphSource:
         self._el: Optional[EdgeList] = None
         self._el_engine: Optional[str] = None
         self._csrs: Dict[Tuple[str, int], CSR] = {}
+        self._sharded_csrs: Dict[Tuple[Any, str, int], CSR] = {}
         self._mtx_hdr = None
         self._gvel_peek = None                # (version, flags, V, E, entries)
         self._framed_hdr = None               # codecs.FramedInfo
@@ -306,6 +308,41 @@ class GraphSource:
                     fallback_edgelist=lambda: self._edgelist_for(opts))
             self._csrs[key] = csr
         return self._csrs[key]
+
+    def csr_sharded(self, mesh, *, axis: str = "data", rho: int = 4) -> CSR:
+        """The graph as a :class:`CSR` sharded row-wise across ``mesh``
+        along ``axis``; computed on first call per ``(mesh, axis,
+        rho)``, memoized on the handle.
+
+        Each mesh shard streams only its byte-range span of the file
+        through the fused parse pipeline (:func:`repro.core.blocks.
+        shard_plan` partitions the block plan; line ownership at span
+        boundaries follows the terminating-newline rule, so no edge is
+        parsed twice) and the packed per-shard device edges feed the
+        distributed degree-psum / ``all_to_all`` / local-CSR build with
+        no host detour.  ``offsets`` is the per-shard local offsets
+        stacked along the mesh axis; see docs/distributed.md for the
+        result layout.  Only text edgelists shard this way: MTX raises
+        (banner semantics apply to :meth:`csr` only) and ``.gvel``
+        snapshots raise (already parsed — no text to byte-partition).
+        """
+        if self.format == FORMAT_MTX:
+            raise ValueError(
+                f"{self.path}: csr_sharded() does not apply MTX banner "
+                f"attributes; convert to a plain edgelist first or use "
+                f".csr()")
+        if self.format == FORMAT_GVEL:
+            raise ValueError(
+                f"{self.path}: .gvel snapshots are already parsed — "
+                f"byte-range sharded streaming applies to text "
+                f"edgelists; use .csr() and shard the result, or keep "
+                f"the original text file for sharded loads")
+        key = (mesh, axis, int(rho))
+        if key not in self._sharded_csrs:
+            self._sharded_csrs[key] = read_csr_sharded_via(
+                self.path, self._opts_for("csr"), mesh=mesh, axis=axis,
+                rho=rho)
+        return self._sharded_csrs[key]
 
     def _edgelist_for(self, opts: LoadOptions) -> EdgeList:
         """EdgeList through a specific engine, sharing the memo when the

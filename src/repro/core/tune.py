@@ -97,7 +97,7 @@ def measure_geometry(data: np.ndarray, beta: int, batch_blocks: int, *,
 
     from .blocks import (MemoryBlockSource, StagingArena, flat_len,
                          owned_range, plan_blocks)
-    from .parse import parse_accumulate
+    from .parse import make_accumulators, parse_accumulate
 
     plan = plan_blocks(len(data), beta=beta, overlap=overlap)
     os_, oe = owned_range(plan)
@@ -108,10 +108,8 @@ def measure_geometry(data: np.ndarray, beta: int, batch_blocks: int, *,
     source = MemoryBlockSource(data)
 
     def one_pass() -> None:
-        acc_src = jnp.full((cap,), -1, jnp.int32)
-        acc_dst = jnp.full((cap,), -1, jnp.int32)
-        acc_w = jnp.zeros((cap,), jnp.float32) if weighted else None
-        total = jnp.zeros((), jnp.int32)
+        acc_src, acc_dst, acc_w, total = make_accumulators(
+            cap, weighted=weighted)
         for i in range(num_batches):
             start = i * batch_blocks
             ids = np.arange(start, min(start + batch_blocks,
@@ -186,7 +184,19 @@ def _save_profile(path: str, prof: Dict) -> None:
     os.replace(tmp, path)                  # atomic: readers never see half
 
 
+def _slot_name(weighted: bool, shards: int) -> str:
+    """Profile slot: weighted/unweighted, with a ``_d{shards}`` suffix
+    for the sharded streaming path (each shard streams ~1/d of the file
+    with d parse pipelines contending for the same cores, so its knee
+    sits elsewhere than the single-stream one)."""
+    slot = "weighted" if weighted else "unweighted"
+    if shards > 1:
+        slot = f"{slot}_d{int(shards)}"
+    return slot
+
+
 def save_geometry(rows: List[Dict], *, weighted: bool = False,
+                  shards: int = 1,
                   path: Optional[str] = None) -> Dict[str, int]:
     """Persist a sweep's winner (plus the full rows) into this host's
     profile slot; returns the winner.  The single place the profile
@@ -199,29 +209,33 @@ def save_geometry(rows: List[Dict], *, weighted: bool = False,
     p = path or cache_path()
     best = best_geometry(rows)
     prof = _load_profile(p)
-    prof["hosts"].setdefault(host_key(), {})[
-        "weighted" if weighted else "unweighted"] = {
-            **best, "sweep": rows, "measured_at": int(time.time())}
+    prof["hosts"].setdefault(host_key(), {})[_slot_name(weighted, shards)] = {
+        **best, "sweep": rows, "measured_at": int(time.time())}
     _save_profile(p, prof)
     return best
 
 
-def tuned_geometry(*, weighted: bool = False, refresh: bool = False,
-                   **sweep_kw) -> Dict[str, int]:
+def tuned_geometry(*, weighted: bool = False, shards: int = 1,
+                   refresh: bool = False, **sweep_kw) -> Dict[str, int]:
     """The measured ``{"beta": ..., "batch_blocks": ...}`` for this host.
 
     Loads the per-host JSON profile; on a miss (or ``refresh=True``)
     runs :func:`run_sweep` once — tens of seconds of compile+measure —
     and persists the winner alongside the full sweep rows.  Weighted
     and unweighted parses are profiled separately (the weighted program
-    does more work per byte).
+    does more work per byte), and each shard count gets its own slot
+    (``shards`` d>1 measures on a ~1/d sample — the span one of d
+    byte-range shards would stream).
     """
     path = cache_path()
-    key, slot = host_key(), "weighted" if weighted else "unweighted"
+    key, slot = host_key(), _slot_name(weighted, shards)
     prof = _load_profile(path)
     entry = prof["hosts"].get(key, {}).get(slot)
     if entry and not refresh:
         return {"beta": int(entry["beta"]),
                 "batch_blocks": int(entry["batch_blocks"])}
+    if shards > 1:
+        sweep_kw.setdefault(
+            "sample_bytes", max(SAMPLE_BYTES // int(shards), 256 * 1024))
     rows = run_sweep(weighted=weighted, **sweep_kw)
-    return save_geometry(rows, weighted=weighted, path=path)
+    return save_geometry(rows, weighted=weighted, shards=shards, path=path)

@@ -29,3 +29,10 @@ def run_devices_subprocess(code: str, num_devices: int = 8,
 @pytest.fixture(scope="session")
 def devices8():
     return run_devices_subprocess
+
+
+@pytest.fixture(scope="session")
+def devices4():
+    def run(code: str, timeout: int = 560) -> str:
+        return run_devices_subprocess(code, num_devices=4, timeout=timeout)
+    return run
