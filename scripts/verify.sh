@@ -80,4 +80,23 @@ python scripts/bench_diff.py BENCH_e2e.json /tmp/BENCH_e2e_quick.json \
     --require-only --require 'e2e.load_csr_streaming>=1.0' \
     --require 'e2e.load_csr_sharded_d4>=1.0'
 
+# query-service smoke + gate: thousands of mixed point/range/full
+# requests through the hot-graph cache (tests/test_query.py and
+# tests/test_cache.py run in the main pytest lane above).  The floor
+# pins serving a request to never cost more than the naive
+# open-full-load-slice answer (speedup >= 1.0) — if the selective
+# path rots back to full-section reads, it shows up here.
+python -m benchmarks.query_service --quick --json /tmp/BENCH_query_quick.json
+python - <<'PY'
+import json
+rows = json.load(open("/tmp/BENCH_query_quick.json"))
+assert rows and all(set(r) == {"name", "seconds", "mb", "speedup"}
+                    for r in rows), rows
+names = {r["name"] for r in rows}
+assert "e2e.query_mixed" in names, names
+print(f"query benchmark json: {len(rows)} rows OK")
+PY
+python scripts/bench_diff.py BENCH_e2e.json /tmp/BENCH_query_quick.json \
+    --require-only --require 'e2e.query_mixed>=1.0'
+
 echo "verify: all green"

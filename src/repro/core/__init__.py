@@ -29,12 +29,18 @@ Public API:
                                            autotuning for the streaming
                                            engines (open_graph(tune=True);
                                            docs/performance.md)
+    SourceCache, query, default_cache    — process-level hot-graph cache: a
+                                           bounded LRU of open GraphSources
+                                           serving point/range/full queries
+                                           (query(path, "neighbors",
+                                           vertex=v); docs/query.md)
     EdgeList, CSR, GraphMeta             — core types
 """
 from .types import CSR, EdgeList, GraphMeta
 from .loader import (load_edgelist, load_csr, register_engine, get_engine,
                      available_engines, LoaderEngine, LoadOptions)
-from .source import open_graph, GraphSource, SourceInfo
+from .source import open_graph, GraphSource, SourceInfo, slice_csr
+from .cache import SourceCache, query, default_cache
 from .edgelist import read_edgelist, read_edgelist_numpy, symmetrize
 from .csr import convert_to_csr, read_csr, csr_to_dense
 from .mtx import read_mtx, read_mtx_csr, write_mtx, mtx_to_snapshot
@@ -44,12 +50,13 @@ from .codecs import (register_codec, get_codec, available_codecs,
 from .generate import make_graph_file, rmat_edges, uniform_edges, grid_edges, write_edgelist
 from .distributed import (load_csr_sharded, load_csr_sharded_stream,
                           host_shard_and_load)
-from . import (baselines, build, codecs, compat, degrees, loader, parse,
-               parse_np, blocks, snapshot, source, tune)
+from . import (baselines, build, cache, codecs, compat, degrees, loader,
+               parse, parse_np, blocks, snapshot, source, tune)
 
 __all__ = [
     "CSR", "EdgeList", "GraphMeta",
-    "open_graph", "GraphSource", "SourceInfo", "LoadOptions",
+    "open_graph", "GraphSource", "SourceInfo", "LoadOptions", "slice_csr",
+    "SourceCache", "query", "default_cache",
     "load_edgelist", "load_csr", "register_engine", "get_engine",
     "available_engines", "LoaderEngine",
     "save_snapshot", "read_snapshot", "Snapshot", "SnapshotError",
@@ -61,6 +68,6 @@ __all__ = [
     "make_graph_file", "rmat_edges", "uniform_edges", "grid_edges",
     "write_edgelist",
     "load_csr_sharded", "load_csr_sharded_stream", "host_shard_and_load",
-    "baselines", "build", "codecs", "compat", "degrees", "loader", "parse",
-    "parse_np", "blocks", "snapshot", "source", "tune",
+    "baselines", "build", "cache", "codecs", "compat", "degrees", "loader",
+    "parse", "parse_np", "blocks", "snapshot", "source", "tune",
 ]

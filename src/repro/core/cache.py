@@ -1,0 +1,253 @@
+"""Process-level hot-graph cache: a bounded, thread-safe LRU of open
+:class:`~repro.core.source.GraphSource` handles, and the serve-facing
+``query(path, op)`` entry built on it.
+
+A graph-query service (ParaGrapher's serving scenario: thousands of
+point/range reads per second against a snapshot corpus) must not pay
+open-and-validate per request, must notice when a snapshot is swapped
+under it, and must bound how many mmaps / decoded sections it pins.
+This module is that layer:
+
+    from repro.core.cache import query
+
+    nbrs = query("web.gvel", "neighbors", vertex=42)
+    rows = query("web.gvel", "rows", rows=range(100, 200))
+    csr  = query("web.gvel", "csr")
+
+* **Keyed by content, not path**: entries are validated against
+  ``(mtime_ns, size)`` on every hit — overwriting a snapshot (the
+  swap-under-the-server scenario) invalidates its entry on the next
+  request, which reopens the new file.  No TTLs, no staleness window
+  beyond the filesystem's mtime granularity.
+* **Bounded LRU**: at most ``capacity`` open handles; the least
+  recently used is evicted (dropping its mmap and decoded-section
+  memos with it).
+* **Thread-safe, single-open**: concurrent requests for the same path
+  coordinate through a pending slot so a cold file is opened and
+  validated exactly once, not once per waiting thread; every wait-er
+  gets the same handle.  Product access on a shared handle is safe:
+  section decodes are lock-guarded per section
+  (:mod:`repro.core.snapshot`) and memoized products are immutable.
+
+The default process cache (capacity from ``$REPRO_CACHE_CAPACITY``,
+else 16) serves the module-level :func:`query`; build explicit
+:class:`SourceCache` instances for isolation (tests, per-tenant
+caches).  Cache semantics and invalidation rules: ``docs/query.md``.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from collections import OrderedDict
+from typing import Any, Dict, Optional, Tuple
+
+from .source import GraphSource, open_graph
+
+_DEFAULT_CAPACITY = int(os.environ.get("REPRO_CACHE_CAPACITY", "16"))
+
+
+class _Pending:
+    """One in-flight open: waiters block on ``event``; the opener
+    publishes ``source`` or ``error`` before setting it."""
+
+    __slots__ = ("event", "source", "error")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.source: Optional[GraphSource] = None
+        self.error: Optional[BaseException] = None
+
+
+class _Entry:
+    __slots__ = ("key", "source")
+
+    def __init__(self, key, source):
+        self.key = key
+        self.source = source
+
+
+def _stat_key(path: str) -> Tuple[int, int]:
+    st = os.stat(path)
+    return st.st_mtime_ns, st.st_size
+
+
+class SourceCache:
+    """Bounded, thread-safe LRU of open :class:`GraphSource` handles,
+    keyed by ``(path, mtime_ns, size, open-kwargs)``.
+
+    ``get`` returns the cached handle when the file on disk still
+    matches the entry's stat key, else drops the stale entry and
+    reopens.  ``capacity`` bounds simultaneously-open handles (mmaps +
+    decoded sections); eviction is strict LRU.  All open keyword
+    arguments participate in the key, so ``get(p)`` and
+    ``get(p, weighted=False)`` are distinct entries (kwarg values must
+    be hashable).
+    """
+
+    def __init__(self, capacity: int = _DEFAULT_CAPACITY, *, open_fn=None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._open_fn = open_graph if open_fn is None else open_fn
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[tuple, _Entry]" = OrderedDict()
+        self._pending: Dict[tuple, _Pending] = {}
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+        self._invalidations = 0
+
+    # -- core ----------------------------------------------------------------
+
+    def get(self, path: str, **open_kw) -> GraphSource:
+        """The cached handle for ``path`` (opened with ``open_kw``),
+        opening at most once per (path, stat, kwargs) across threads.
+        A changed file (mtime or size) invalidates the old entry and
+        reopens; raising opens are not cached (the next request
+        retries)."""
+        path = str(path)
+        slot = (path, tuple(sorted(open_kw.items())))
+        while True:
+            key = _stat_key(path)       # raises for missing paths — uncached
+            with self._lock:
+                ent = self._entries.get(slot)
+                if ent is not None:
+                    if ent.key == key:
+                        self._hits += 1
+                        self._entries.move_to_end(slot)
+                        return ent.source
+                    # snapshot swapped under us: drop and reopen
+                    del self._entries[slot]
+                    self._invalidations += 1
+                pending = self._pending.get(slot)
+                if pending is None:
+                    pending = self._pending[slot] = _Pending()
+                    opener = True
+                else:
+                    opener = False
+            if not opener:
+                pending.event.wait()
+                if pending.source is not None:
+                    return pending.source
+                # the opener failed; retry (surfacing our own error)
+                continue
+            try:
+                source = self._open_fn(path, **open_kw)
+            except BaseException as exc:
+                pending.error = exc
+                with self._lock:
+                    self._pending.pop(slot, None)
+                pending.event.set()
+                raise
+            with self._lock:
+                self._pending.pop(slot, None)
+                self._misses += 1
+                self._entries[slot] = _Entry(key, source)
+                self._entries.move_to_end(slot)
+                while len(self._entries) > self.capacity:
+                    self._entries.popitem(last=False)
+                    self._evictions += 1
+            pending.source = source
+            pending.event.set()
+            return source
+
+    def query(self, path: str, op: str, *, rows=None, vertex=None,
+              method: str = "staged", rho: int = 4,
+              with_weights: bool = False, **open_kw) -> Any:
+        """One request against the cache.  ``op`` selects the product:
+
+        ==============  ==================================================
+        op              result
+        ==============  ==================================================
+        ``info``        :class:`~repro.core.source.SourceInfo`
+        ``csr``         the full :class:`~repro.core.types.CSR`
+        ``rows``        ``.csr(rows=rows)`` — row-local CSR slice
+        ``neighbors``   ``.neighbors(vertex)`` point lookup
+        ``degree``      ``.degree(vertex)``
+        ``edgelist``    the full :class:`~repro.core.types.EdgeList`
+        ==============  ==================================================
+        """
+        src = self.get(path, **open_kw)
+        if op == "info":
+            return src.info()
+        if op in ("csr", "full"):
+            return src.csr(method=method, rho=rho)
+        if op in ("rows", "csr_rows", "range"):
+            if rows is None:
+                raise ValueError("op 'rows' needs rows=")
+            return src.csr(method=method, rho=rho, rows=rows)
+        if op in ("neighbors", "point"):
+            if vertex is None:
+                raise ValueError("op 'neighbors' needs vertex=")
+            return src.neighbors(vertex, with_weights=with_weights)
+        if op == "degree":
+            if vertex is None:
+                raise ValueError("op 'degree' needs vertex=")
+            return src.degree(vertex)
+        if op == "edgelist":
+            return src.edgelist()
+        raise ValueError(
+            f"unknown query op {op!r}; one of: info, csr, rows, neighbors, "
+            f"degree, edgelist")
+
+    # -- management ----------------------------------------------------------
+
+    def invalidate(self, path: Optional[str] = None) -> int:
+        """Drop entries for ``path`` (all its kwarg variants), or every
+        entry with ``path=None``.  Returns the number dropped.  In-use
+        handles stay valid for their holders — only the cache forgets
+        them."""
+        with self._lock:
+            if path is None:
+                n = len(self._entries)
+                self._entries.clear()
+            else:
+                path = str(path)
+                stale = [s for s in self._entries if s[0] == path]
+                for s in stale:
+                    del self._entries[s]
+                n = len(stale)
+            self._invalidations += n
+            return n
+
+    def clear(self) -> None:
+        self.invalidate(None)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, path: str) -> bool:
+        with self._lock:
+            return any(s[0] == str(path) for s in self._entries)
+
+    def stats(self) -> Dict[str, int]:
+        """Counters since construction: ``hits``/``misses`` (misses ==
+        opens that were cached), ``evictions`` (capacity),
+        ``invalidations`` (stat-key changes + explicit), ``size``."""
+        with self._lock:
+            return {"hits": self._hits, "misses": self._misses,
+                    "evictions": self._evictions,
+                    "invalidations": self._invalidations,
+                    "size": len(self._entries),
+                    "capacity": self.capacity}
+
+
+_default: Optional[SourceCache] = None
+_default_lock = threading.Lock()
+
+
+def default_cache() -> SourceCache:
+    """The process-wide cache behind the module-level :func:`query`."""
+    global _default
+    with _default_lock:
+        if _default is None:
+            _default = SourceCache()
+        return _default
+
+
+def query(path: str, op: str, **kw) -> Any:
+    """Serve one graph query through the process-wide hot-graph cache —
+    the front door for the query service (see :meth:`SourceCache.query`
+    for ops).  ``repro.serve`` / benchmark drivers call this."""
+    return default_cache().query(path, op, **kw)

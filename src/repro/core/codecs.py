@@ -252,6 +252,100 @@ def iter_decompressed_frames(payload, codec: Codec, *,
         yield raw
 
 
+@dataclasses.dataclass(frozen=True)
+class FrameEntry:
+    """One frame's coordinates inside a frame stream: where its
+    compressed payload sits (``payload_off``/``comp_len``) and which
+    uncompressed byte range it covers (``raw_off``/``raw_len``)."""
+
+    index: int
+    payload_off: int              # byte offset of compressed payload
+    comp_len: int
+    raw_off: int                  # cumulative uncompressed offset
+    raw_len: int
+    crc: int
+
+    @property
+    def raw_end(self) -> int:
+        return self.raw_off + self.raw_len
+
+
+def frame_table(payload, *, context: str = "frame stream") -> list:
+    """Walk a frame stream's headers into a seek index — a list of
+    :class:`FrameEntry` — without decompressing anything.
+
+    The per-frame headers (comp_len, raw_len, crc) form an implicit
+    index: 12 bytes read per frame, compressed payloads skipped.  This
+    is the planner behind partial section decode (``.gvel`` v2 row
+    ranges touch only the frames their byte span overlaps) and the
+    per-section frame counts in ``GraphSource.info()``.  Raises
+    ``ValueError`` on a truncated header or a payload running past the
+    end of the stream.
+    """
+    view = memoryview(payload)
+    entries = []
+    pos = 0
+    raw_off = 0
+    idx = 0
+    while pos < len(view):
+        if pos + FRAME_HDR_LEN > len(view):
+            raise ValueError(
+                f"{context}: truncated frame header at byte {pos} "
+                f"({len(view) - pos} of {FRAME_HDR_LEN} bytes)")
+        comp_len, raw_len, crc = struct.unpack_from(FRAME_HDR_FMT, view, pos)
+        pos += FRAME_HDR_LEN
+        if pos + comp_len > len(view):
+            raise ValueError(
+                f"{context}: truncated frame payload at byte {pos} "
+                f"({len(view) - pos} of {comp_len} declared bytes)")
+        entries.append(FrameEntry(idx, pos, comp_len, raw_off, raw_len, crc))
+        pos += comp_len
+        raw_off += raw_len
+        idx += 1
+    return entries
+
+
+def count_frames(payload, *, context: str = "frame stream") -> int:
+    """Frame count of a stream by header walk (no decompression)."""
+    return len(frame_table(payload, context=context))
+
+
+def frames_overlapping(entries: list, byte_lo: int, byte_hi: int) -> list:
+    """The sub-list of ``entries`` whose uncompressed byte ranges
+    overlap ``[byte_lo, byte_hi)`` — the frames a partial read must
+    decode, and no others.  Empty ranges touch no frames."""
+    if byte_hi <= byte_lo:
+        return []
+    return [e for e in entries
+            if e.raw_off < byte_hi and e.raw_end > byte_lo and e.raw_len]
+
+
+def decode_frame(payload, entry: FrameEntry, codec: Codec, *,
+                 context: str = "frame stream") -> bytes:
+    """Decompress and checksum exactly one frame of a stream.
+
+    The seek-and-decode primitive: callers resolve ``entry`` from
+    :func:`frame_table` (header walk only) and pay decompression for
+    just the frames they need — the same per-frame selectivity
+    :func:`open_shard_block_source` gives the sharded streaming loader,
+    exposed for random access.  Raises ``ValueError`` on a
+    declared-length or CRC32 mismatch.
+    """
+    view = memoryview(payload)
+    raw = codec.decompress(
+        bytes(view[entry.payload_off:entry.payload_off + entry.comp_len]),
+        entry.raw_len)
+    if len(raw) != entry.raw_len:
+        raise ValueError(
+            f"{context}: frame {entry.index} declared {entry.raw_len} "
+            f"uncompressed bytes but decompressed to {len(raw)}")
+    if zlib.crc32(raw) != entry.crc:
+        raise ValueError(
+            f"{context}: frame {entry.index} checksum mismatch "
+            f"(corrupt payload)")
+    return raw
+
+
 def decompress_frames(payload, raw_len: int, codec: Codec, *,
                       context: str = "frame stream") -> np.ndarray:
     """Whole frame stream -> uint8 array of exactly ``raw_len`` bytes."""

@@ -49,7 +49,8 @@ from __future__ import annotations
 
 import os
 import struct
-from typing import List, Optional, Tuple
+import threading
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -79,6 +80,15 @@ SEC_EDGE_WEIGHTS = 3
 SEC_CSR_OFFSETS = 4
 SEC_CSR_INDICES = 5
 SEC_CSR_WEIGHTS = 6
+
+SECTION_NAMES = {
+    SEC_SRC: "src",
+    SEC_DST: "dst",
+    SEC_EDGE_WEIGHTS: "edge_weights",
+    SEC_CSR_OFFSETS: "csr_offsets",
+    SEC_CSR_INDICES: "csr_indices",
+    SEC_CSR_WEIGHTS: "csr_weights",
+}
 
 # dtype codes are explicit little-endian; a snapshot means the same bytes
 # on every host (big-endian writers must byteswap before writing).
@@ -167,6 +177,31 @@ def peek_table(path: str):
             codec_id, raw_nbytes = 0, nbytes
         entries.append((sid, code, off, nbytes, codec_id, raw_nbytes))
     return version, flags, v, e, entries
+
+
+def section_frame_counts(path: str) -> Dict[str, int]:
+    """Per-section frame counts for a snapshot's *compressed* sections:
+    ``{section_name: frame_count}`` (empty for v1 / all-raw files).
+
+    Reads the header, the section table, and each compressed section's
+    12-byte frame headers (``codecs.frame_table`` walks them, skipping
+    every compressed payload) — never decompresses anything.  This is
+    the partial-decode planner's view of the file, surfaced through
+    ``GraphSource.info()``.
+    """
+    from . import codecs
+    _version, _flags, _v, _e, entries = peek_table(path)
+    out: Dict[str, int] = {}
+    data = None
+    for sid, _code, off, nbytes, codec_id, _raw in entries:
+        if codec_id == 0 or sid not in SECTION_NAMES:
+            continue
+        if data is None:
+            data = mmap_bytes(path)
+        out[SECTION_NAMES[sid]] = codecs.count_frames(
+            data[off:off + nbytes],
+            context=f"{path} section {sid}")
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -310,10 +345,21 @@ class _Section:
     caller never touches is never decompressed — and corruption in it
     is never noticed (the deferred-error trade documented in
     ``docs/api.md``).
+
+    :meth:`get_slice` is the selective-read path below :meth:`get`: an
+    element range of an uncompressed section is a zero-copy sub-view,
+    and an element range of a *compressed* section decodes only the
+    frames its byte span overlaps (the frame headers form a seek index
+    — ``codecs.frame_table``), caching decoded frames per frame so a
+    stream of point reads never re-pays a frame's decompression.
+    Decode paths are lock-guarded: concurrent readers of one section
+    (the query-service cache shares handles across threads) each see
+    fully-decoded, immutable arrays.
     """
 
     __slots__ = ("path", "sid", "dtype", "offset", "nbytes", "codec",
-                 "raw_nbytes", "_data", "_arr")
+                 "raw_nbytes", "_data", "_arr", "_lock", "_ftable",
+                 "_frames")
 
     def __init__(self, path, sid, dtype, offset, nbytes, codec,
                  raw_nbytes, data):
@@ -327,6 +373,9 @@ class _Section:
         self._data = data
         self._arr = (data[offset:offset + nbytes].view(dtype)
                      if codec is None else None)
+        self._lock = threading.Lock()
+        self._ftable = None              # codecs.FrameEntry seek index
+        self._frames: Dict[int, np.ndarray] = {}   # frame idx -> raw bytes
 
     @property
     def length(self) -> int:
@@ -339,19 +388,89 @@ class _Section:
 
     def get(self) -> np.ndarray:
         if self._arr is None:
-            # dynamic attribute lookup so tests can instrument the
-            # decode path (repro.core.codecs.decompress_frames)
+            with self._lock:
+                if self._arr is not None:       # decoded while waiting
+                    return self._arr
+                # dynamic attribute lookup so tests can instrument the
+                # decode path (repro.core.codecs.decompress_frames)
+                from . import codecs
+                try:
+                    arr = codecs.decompress_frames(
+                        self._data[self.offset:self.offset + self.nbytes],
+                        self.raw_nbytes, self.codec,
+                        context=f"{self.path} section {self.sid}")
+                except ValueError as exc:
+                    raise SnapshotError(str(exc)) from None
+                arr.flags.writeable = False  # parity with the mmap views
+                self._frames.clear()         # full decode supersedes frames
+                self._arr = arr.view(self.dtype)
+        return self._arr
+
+    def _frame_table(self):
+        if self._ftable is None:
             from . import codecs
             try:
-                arr = codecs.decompress_frames(
+                self._ftable = codecs.frame_table(
                     self._data[self.offset:self.offset + self.nbytes],
-                    self.raw_nbytes, self.codec,
                     context=f"{self.path} section {self.sid}")
             except ValueError as exc:
                 raise SnapshotError(str(exc)) from None
-            arr.flags.writeable = False  # parity with the mmap views
-            self._arr = arr.view(self.dtype)
-        return self._arr
+        return self._ftable
+
+    def get_slice(self, lo: int, hi: int) -> np.ndarray:
+        """Elements ``[lo, hi)`` of this section.
+
+        Uncompressed (and already-fully-decoded) sections return a
+        zero-copy sub-view.  Compressed sections decode **only the
+        frames overlapping the element range's byte span** — resolved
+        through the frame-header seek index, each decoded frame cached
+        on the cell — and assemble the slice from them.  Corruption in
+        frames the range never touches is never noticed (the partial
+        analogue of the per-section deferred-error trade).
+        """
+        if not 0 <= lo <= hi <= self.length:
+            raise IndexError(
+                f"{self.path} section {self.sid}: element range "
+                f"[{lo}, {hi}) outside [0, {self.length})")
+        if self._arr is not None:
+            return self._arr[lo:hi]
+        isz = self.dtype.itemsize
+        byte_lo, byte_hi = lo * isz, hi * isz
+        if byte_lo == byte_hi:
+            return np.empty(0, self.dtype)
+        from . import codecs
+        with self._lock:
+            if self._arr is not None:           # raced with a full get()
+                return self._arr[lo:hi]
+            entries = self._frame_table()
+            touched = codecs.frames_overlapping(entries, byte_lo, byte_hi)
+            if not touched or touched[0].raw_off > byte_lo \
+                    or touched[-1].raw_end < byte_hi:
+                raise SnapshotError(
+                    f"{self.path} section {self.sid}: frames cover "
+                    f"{self.raw_nbytes} bytes but byte range "
+                    f"[{byte_lo}, {byte_hi}) is not fully framed")
+            payload = self._data[self.offset:self.offset + self.nbytes]
+            parts = []
+            for entry in touched:
+                raw = self._frames.get(entry.index)
+                if raw is None:
+                    try:
+                        # dynamic lookup: tests instrument decode_frame
+                        # to assert ONLY the touched frames decode
+                        raw = np.frombuffer(codecs.decode_frame(
+                            payload, entry, self.codec,
+                            context=f"{self.path} section {self.sid}"),
+                            np.uint8)
+                    except ValueError as exc:
+                        raise SnapshotError(str(exc)) from None
+                    self._frames[entry.index] = raw
+                parts.append(raw)
+            base = touched[0].raw_off
+            buf = parts[0] if len(parts) == 1 else np.concatenate(parts)
+            out = buf[byte_lo - base:byte_hi - base].view(self.dtype)
+            out.flags.writeable = False
+            return out
 
 
 class Snapshot:
@@ -474,6 +593,87 @@ class Snapshot:
             raise SnapshotError(f"{self.path}: snapshot has no CSR sections")
         return CSR(self.csr_offsets, self.csr_indices, self.csr_weights,
                    self.num_vertices)
+
+    # selective reads --------------------------------------------------------
+    def _offsets_slice(self, lo: int, hi: int) -> np.ndarray:
+        """``offsets[lo:hi+1]`` via partial decode, with the same
+        consistency guarantees the full read enforces, scoped to the
+        slice: monotone, within ``[0, num_edges]``."""
+        off = self._sections[SEC_CSR_OFFSETS].get_slice(lo, hi + 1)
+        # point reads slice 2-3 elements; ufunc dispatch would dominate
+        # them, so check tiny slices in plain Python
+        bad = False
+        if off.size:
+            if int(off[0]) < 0 or int(off[-1]) > self.num_edges:
+                bad = True
+            elif off.size <= 4:
+                prev = int(off[0])
+                for x in off[1:]:
+                    x = int(x)
+                    if x < prev:
+                        bad = True
+                        break
+                    prev = x
+            else:
+                bad = bool(np.any(np.diff(off) < 0))
+        if bad:
+            raise SnapshotError(
+                f"{self.path}: csr offsets [{lo}, {hi}] are inconsistent "
+                f"(non-monotone or outside [0, {self.num_edges}])")
+        return off
+
+    def csr_rows(self, lo: int, hi: int, *,
+                 weighted: Optional[bool] = None) -> CSR:
+        """The CSR restricted to vertex rows ``[lo, hi)``, decoding (and
+        for raw snapshots, touching) only the bytes those rows span.
+
+        Returns a row-local :class:`CSR` — ``offsets`` rebased to 0,
+        ``row_start=lo``, global ``num_vertices`` — exactly the
+        shard-local layout the distributed loader emits, so
+        ``csr.neighbors(u - lo)`` works unchanged.  For uncompressed
+        sections the targets/weights come back as zero-copy mmap
+        sub-views; compressed sections decode only the frames the row
+        range's byte span overlaps (frames are cached per section, so
+        repeated point reads are decode-free).  ``weighted=None`` means
+        "what the snapshot says".
+        """
+        if not self.has_csr:
+            raise SnapshotError(f"{self.path}: snapshot has no CSR sections")
+        if not 0 <= lo <= hi <= self.num_vertices:
+            raise IndexError(
+                f"{self.path}: row range [{lo}, {hi}) outside "
+                f"[0, {self.num_vertices})")
+        if weighted is None:
+            weighted = self.weighted
+        elif weighted and not self.weighted:
+            raise SnapshotError(
+                f"{self.path}: weighted rows requested but snapshot is "
+                f"unweighted")
+        off = self._offsets_slice(lo, hi)
+        e_lo = int(off[0]) if off.size else 0
+        e_hi = int(off[-1]) if off.size else 0
+        targets = self._sections[SEC_CSR_INDICES].get_slice(e_lo, e_hi)
+        w = (self._sections[SEC_CSR_WEIGHTS].get_slice(e_lo, e_hi)
+             if weighted else None)
+        local = off if e_lo == 0 else off - np.int64(e_lo)
+        return CSR(local, targets, w, self.num_vertices, row_start=lo)
+
+    def neighbors(self, u: int, *, weighted: bool = False):
+        """Point lookup: vertex ``u``'s neighbor ids (and weights when
+        asked), decoding only the frames the adjacency span touches."""
+        row = self.csr_rows(int(u), int(u) + 1, weighted=weighted)
+        return (row.targets, row.weights) if weighted else row.targets
+
+    def degree(self, u: int) -> int:
+        """Out-degree of ``u`` — touches exactly two offset elements
+        (at most the offset frames they fall in)."""
+        if not self.has_csr:
+            raise SnapshotError(f"{self.path}: snapshot has no CSR sections")
+        if not 0 <= int(u) < self.num_vertices:
+            raise IndexError(f"{self.path}: vertex {u} outside "
+                             f"[0, {self.num_vertices})")
+        off = self._offsets_slice(int(u), int(u) + 1)
+        return int(off[1]) - int(off[0])
 
 
 def read_snapshot(path: str, *, eager: bool = True) -> Snapshot:
@@ -696,3 +896,46 @@ class SnapshotEngine:
         return CSR(snap.csr_offsets, snap.csr_indices,
                    snap.csr_weights if weighted else None,
                    snap.num_vertices)
+
+    def read_csr_rows(self, path: str, lo: int, hi: int, *,
+                      weighted: bool = False,
+                      num_vertices: Optional[int] = None, offset: int = 0,
+                      **kw) -> Optional[CSR]:
+        """Selective fast path: rows ``[lo, hi)`` straight off the
+        snapshot — mmap sub-views for raw sections, frame-selective
+        decode for compressed ones.  Returns None (caller slices the
+        full product instead) when the snapshot has no CSR sections or
+        the caller pinned a conflicting ``num_vertices``."""
+        snap = self._snap(path)
+        self._check(snap, weighted=weighted, offset=offset)
+        if not snap.has_csr:
+            return None
+        if num_vertices is not None and num_vertices != snap.num_vertices:
+            return None
+        return snap.csr_rows(lo, hi, weighted=weighted)
+
+    def read_neighbors(self, path: str, u: int, *, weighted: bool = False,
+                       num_vertices: Optional[int] = None, offset: int = 0,
+                       **kw):
+        """Point-lookup fast path: ``(targets, weights-or-None)`` for
+        vertex ``u``, or None when no CSR sections are embedded."""
+        snap = self._snap(path)
+        self._check(snap, weighted=weighted, offset=offset)
+        if not snap.has_csr:
+            return None
+        if num_vertices is not None and num_vertices != snap.num_vertices:
+            return None
+        row = snap.csr_rows(int(u), int(u) + 1, weighted=weighted)
+        return row.targets, row.weights
+
+    def read_degree(self, path: str, u: int, *, weighted: bool = False,
+                    num_vertices: Optional[int] = None, offset: int = 0,
+                    **kw) -> Optional[int]:
+        """Degree fast path: two offset elements, no target bytes."""
+        snap = self._snap(path)
+        self._check(snap, weighted=weighted, offset=offset)
+        if not snap.has_csr:
+            return None
+        if num_vertices is not None and num_vertices != snap.num_vertices:
+            return None
+        return snap.degree(u)

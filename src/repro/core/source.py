@@ -45,6 +45,8 @@ import dataclasses
 import os
 from typing import Any, Dict, Optional, Tuple
 
+import numpy as np
+
 from .loader import (DEFAULT_CSR_ENGINE, DEFAULT_EDGELIST_ENGINE, LoadOptions,
                      available_engines, csr_convert_engine, get_engine,
                      read_csr_sharded_via, read_csr_via, read_edgelist_via,
@@ -56,6 +58,46 @@ FORMAT_MTX = "mtx"
 FORMAT_TEXT = "text"
 
 _MTX_BANNER = b"%%MatrixMarket"
+
+
+def _normalize_rows(rows) -> Tuple[int, int]:
+    """``rows`` -> ``(lo, hi)``: a ``range`` with step 1 or a
+    ``(lo, hi)`` pair; bounds checked against |V| downstream."""
+    if isinstance(rows, range):
+        if rows.step != 1:
+            raise ValueError(f"rows must have step 1, got {rows!r}")
+        return rows.start, max(rows.start, rows.stop)
+    try:
+        lo, hi = rows
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"rows must be a step-1 range or a (lo, hi) pair, "
+            f"got {rows!r}") from None
+    lo, hi = int(lo), int(hi)
+    if hi < lo:
+        raise ValueError(f"rows (lo, hi) must have lo <= hi, got {rows!r}")
+    return lo, hi
+
+
+def slice_csr(csr: CSR, lo: int, hi: int) -> CSR:
+    """Vertex rows ``[lo, hi)`` of a global CSR as a row-local CSR:
+    ``offsets`` rebased to 0, ``row_start=lo``, global ``num_vertices``
+    — the same layout the snapshot partial-read path serves, so the
+    fallback (slice the full product) and the fast path (decode only
+    the touched frames) are interchangeable."""
+    if csr.row_start != 0:
+        raise ValueError("slice_csr expects a global CSR (row_start == 0)")
+    if not 0 <= lo <= hi <= csr.num_rows:
+        raise IndexError(
+            f"row range [{lo}, {hi}) outside [0, {csr.num_rows})")
+    offsets = np.asarray(csr.offsets)
+    off = offsets[lo:hi + 1]
+    e_lo = int(off[0]) if off.size else 0
+    e_hi = int(off[-1]) if off.size else 0
+    local = off if e_lo == 0 else off - off.dtype.type(e_lo)
+    targets = np.asarray(csr.targets)[e_lo:e_hi]
+    w = None if csr.weights is None else np.asarray(csr.weights)[e_lo:e_hi]
+    return CSR(local, targets, w, csr.num_vertices, row_start=lo)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +126,11 @@ class SourceInfo:
     has_edgelist: Optional[bool]      # .gvel sections present
     has_csr: Optional[bool]
     engine: Optional[str]             # engine pinned at open (None = default)
+    # per-section frame counts of a compressed .gvel's sections
+    # ({"csr_offsets": 3, ...}; empty for raw sections, None for non-gvel)
+    # — the partial-decode planner's view: a row range decodes only the
+    # frames its byte span touches, and this is how many there are.
+    section_frames: Optional[Dict[str, int]] = None
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -149,6 +196,7 @@ class GraphSource:
         self._mtx_hdr = None
         self._gvel_peek = None                # (version, flags, V, E, entries)
         self._framed_hdr = None               # codecs.FramedInfo
+        self._snap = None                     # pinned lazy Snapshot (gvel)
         if validate:
             self._validate()
 
@@ -234,10 +282,12 @@ class GraphSource:
         codec = self._external_codec_name()
         version = v = e = None
         weighted = symmetric = has_el = has_csr = None
+        section_frames = None
         raw = size if codec is None else None
         if self.format == FORMAT_GVEL:
             from . import codecs
-            from .snapshot import FLAG_CSR, FLAG_EDGELIST, FLAG_WEIGHTED
+            from .snapshot import (FLAG_CSR, FLAG_EDGELIST, FLAG_WEIGHTED,
+                                   section_frame_counts)
             version, flags, v, e, entries = self._peek_gvel()
             weighted = bool(flags & FLAG_WEIGHTED)
             has_el = bool(flags & FLAG_EDGELIST)
@@ -252,6 +302,10 @@ class GraphSource:
                     except ValueError:
                         names.append(f"id{cid}")
                 codec = "+".join(names)
+                # frame counts per compressed section: a header walk
+                # over the 12-byte frame headers (never a payload
+                # decompression) — what the partial-decode planner sees
+                section_frames = section_frame_counts(self.path)
         elif self.format == FORMAT_MTX:
             hdr = self._mtx_header()
             v, e = hdr.meta.num_vertices, hdr.meta.num_edges
@@ -269,7 +323,7 @@ class GraphSource:
             size_bytes=size, raw_bytes=raw, version=version,
             num_vertices=v, num_edges=e, weighted=weighted,
             symmetric=symmetric, has_edgelist=has_el, has_csr=has_csr,
-            engine=self.options.engine)
+            engine=self.options.engine, section_frames=section_frames)
         return self._info
 
     def _external_codec_name(self) -> Optional[str]:
@@ -289,11 +343,27 @@ class GraphSource:
             self._el_engine = opts.engine
         return self._el
 
-    def csr(self, *, method: str = "staged", rho: int = 4) -> CSR:
+    def csr(self, *, method: str = "staged", rho: int = 4,
+            rows=None) -> CSR:
         """The graph as a :class:`CSR`; computed on first call per
         ``(method, rho)``, memoized on the handle.  A ``.gvel``
         snapshot with an embedded CSR serves it straight from mmap
-        (``method``/``rho`` do not apply — the stored CSR wins)."""
+        (``method``/``rho`` do not apply — the stored CSR wins).
+
+        ``rows`` selects a vertex-range slice: a ``range`` with step 1
+        (or a ``(lo, hi)`` pair), returning a row-local CSR —
+        ``offsets`` rebased to 0, ``row_start=lo``, global
+        ``num_vertices`` — per the selective-read contract in
+        ``docs/query.md``.  On a ``.gvel`` snapshot with an embedded
+        CSR this is a *partial load*: raw sections are sliced straight
+        off the mmap (no full-section copy) and compressed sections
+        decode only the frames the row range's byte span touches.
+        Other sources (text, MTX, edgelist-only snapshots) fall back to
+        slicing the full — memoized — CSR, so the result is identical
+        either way.  Row slices are not memoized (the full product is;
+        slices are cheap and unbounded in number)."""
+        if rows is not None:
+            return self._csr_rows(rows, method=method, rho=rho)
         key = (method, rho)
         if key not in self._csrs:
             if self.format == FORMAT_MTX:
@@ -308,6 +378,79 @@ class GraphSource:
                     fallback_edgelist=lambda: self._edgelist_for(opts))
             self._csrs[key] = csr
         return self._csrs[key]
+
+    def _selective_snap(self):
+        """The pinned lazy :class:`Snapshot` when selective reads can
+        serve this source: ``.gvel`` format, no symmetrize/offset
+        transform, an embedded CSR, and any forced ``num_vertices``
+        agreeing with the header — else ``None`` (callers fall back to
+        slicing the full product).
+
+        Pinned on the handle, not fetched through the snapshot engine's
+        single-slot memo: the serving cache (:mod:`repro.core.cache`)
+        keeps handles hot across a multi-snapshot corpus, and a point
+        read is only decode-free on repeat if the partially-decoded
+        frame cache survives with the handle."""
+        if (self.format != FORMAT_GVEL or self.options.symmetric
+                or self.options.offset):
+            return None
+        snap = self._snap
+        if snap is None:
+            from .snapshot import read_snapshot
+            snap = self._snap = read_snapshot(self.path, eager=False)
+        if not snap.has_csr:
+            return None
+        nv = self.options.num_vertices
+        if nv is not None and int(nv) != snap.num_vertices:
+            return None
+        return snap
+
+    def _csr_rows(self, rows, *, method: str, rho: int) -> CSR:
+        lo, hi = _normalize_rows(rows)
+        snap = self._selective_snap()
+        if snap is not None:
+            return snap.csr_rows(lo, hi, weighted=self._weighted())
+        return slice_csr(self.csr(method=method, rho=rho), lo, hi)
+
+    def neighbors(self, u: int, *, with_weights: bool = False):
+        """Point lookup: vertex ``u``'s neighbor ids as a 1-D int32
+        array (ids and weights as a pair with ``with_weights=True``).
+        On a CSR-embedded ``.gvel`` snapshot this reads only the bytes
+        vertex ``u``'s adjacency spans — two offsets plus the target
+        run — decoding at most the frames that span touches; other
+        sources fall back to slicing the full memoized CSR.  Not
+        memoized (see ``docs/query.md``; the hot-graph cache in
+        :mod:`repro.core.cache` is the serving layer's memo)."""
+        u = int(u)
+        if with_weights and not self._weighted():
+            raise ValueError(
+                f"{self.path}: with_weights=True but source is unweighted")
+        snap = self._selective_snap()
+        if snap is not None:
+            # weights decode only when the caller asked for them
+            return snap.neighbors(u, weighted=bool(with_weights))
+        full = self.csr()
+        if not 0 <= u < full.num_rows:
+            raise IndexError(f"{self.path}: vertex {u} outside "
+                             f"[0, {full.num_rows})")
+        lo, hi = int(full.offsets[u]), int(full.offsets[u + 1])
+        ids = np.asarray(full.targets)[lo:hi]
+        if not with_weights:
+            return ids
+        return ids, np.asarray(full.weights)[lo:hi]
+
+    def degree(self, u: int) -> int:
+        """Vertex ``u``'s out-degree — on a CSR-embedded snapshot this
+        touches exactly two offset elements."""
+        u = int(u)
+        snap = self._selective_snap()
+        if snap is not None:
+            return snap.degree(u)
+        full = self.csr()
+        if not 0 <= u < full.num_rows:
+            raise IndexError(f"{self.path}: vertex {u} outside "
+                             f"[0, {full.num_rows})")
+        return int(full.offsets[u + 1]) - int(full.offsets[u])
 
     def csr_sharded(self, mesh, *, axis: str = "data", rho: int = 4) -> CSR:
         """The graph as a :class:`CSR` sharded row-wise across ``mesh``

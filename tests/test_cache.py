@@ -1,0 +1,293 @@
+"""Hot-graph cache (``repro.core.cache``): LRU bound and eviction
+order, ``(path, mtime, size)`` invalidation on snapshot swap,
+single-flight cold opens, a threaded hammer (no corruption, no
+double-open, deterministic results), query-op dispatch, and the
+instrumented-codec counter proving a row-range query through the cache
+decodes only the frames its span touches."""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (codecs, load_edgelist, open_graph, save_snapshot)
+from repro.core.build import csr_np
+from repro.core.cache import SourceCache, default_cache, query
+from repro.core.csr import convert_to_csr
+from repro.core.generate import write_edgelist
+
+FRAME_BETA = 96
+
+
+def _snapshot(tmp_path, name, *, seed=0, v=60, e=400, compress="zlib",
+              weighted=False):
+    rng = np.random.default_rng(seed)
+    src, dst = rng.integers(0, v, e), rng.integers(0, v, e)
+    w = (rng.random(e) * 9).round(3).astype(np.float32) if weighted else None
+    el_path = str(tmp_path / f"{name}.el")
+    write_edgelist(el_path, src, dst, w, base=1)
+    el = load_edgelist(el_path, engine="numpy", weighted=weighted,
+                       num_vertices=v)
+    gv = str(tmp_path / f"{name}.gvel")
+    save_snapshot(gv, edgelist=el, csr=convert_to_csr(el, engine="numpy"),
+                  compress=compress, frame_beta=FRAME_BETA)
+    oracle = csr_np(src.astype(np.int32), dst.astype(np.int32), w, v)
+    return gv, v, oracle
+
+
+# ---- LRU semantics -----------------------------------------------------------
+
+def test_lru_bound_and_eviction_order(tmp_path):
+    paths = [_snapshot(tmp_path, f"g{i}", seed=i)[0] for i in range(3)]
+    c = SourceCache(capacity=2)
+    a = c.get(paths[0])
+    b = c.get(paths[1])
+    assert len(c) == 2 and paths[0] in c and paths[1] in c
+    c.get(paths[2])                       # evicts paths[0] (LRU)
+    assert len(c) == 2
+    assert paths[0] not in c and paths[1] in c and paths[2] in c
+    assert c.stats()["evictions"] == 1
+    c.get(paths[1])                       # touch: 1 newer than 2
+    c.get(paths[0])                       # now evicts paths[2]
+    assert paths[2] not in c and paths[1] in c
+    # the evicted handle still works for its holder, and a re-get
+    # returns a fresh handle with identical results
+    assert np.array_equal(a.neighbors(5), c.get(paths[0]).neighbors(5))
+    assert c.get(paths[1]) is b           # hit: same object
+
+
+def test_capacity_validation():
+    with pytest.raises(ValueError):
+        SourceCache(capacity=0)
+
+
+def test_distinct_kwargs_distinct_entries(tmp_path):
+    gv, v, _ = _snapshot(tmp_path, "g", weighted=True)
+    c = SourceCache(capacity=4)
+    s1 = c.get(gv)
+    s2 = c.get(gv, weighted=False)
+    assert s1 is not s2
+    assert len(c) == 2
+    assert c.get(gv) is s1
+
+
+def test_missing_path_raises_and_caches_nothing(tmp_path):
+    c = SourceCache(capacity=2)
+    with pytest.raises(FileNotFoundError):
+        c.get(str(tmp_path / "nope.gvel"))
+    assert len(c) == 0
+
+
+def test_failed_open_not_cached(tmp_path):
+    gv, _, _ = _snapshot(tmp_path, "g")
+    boom = {"n": 2}
+
+    def flaky(path, **kw):
+        if boom["n"]:
+            boom["n"] -= 1
+            raise RuntimeError("transient")
+        return open_graph(path, **kw)
+
+    c = SourceCache(capacity=2, open_fn=flaky)
+    for _ in range(2):
+        with pytest.raises(RuntimeError):
+            c.get(gv)
+    assert len(c) == 0
+    assert c.get(gv) is c.get(gv)         # recovered, and cached
+
+
+# ---- invalidation on snapshot swap -------------------------------------------
+
+def test_swap_invalidates_on_next_request(tmp_path):
+    gv, v, oracle1 = _snapshot(tmp_path, "swap", seed=1)
+    c = SourceCache(capacity=2)
+    got1 = c.query(gv, "neighbors", vertex=7)
+    e_lo, e_hi = int(oracle1.offsets[7]), int(oracle1.offsets[8])
+    assert np.array_equal(got1, oracle1.targets[e_lo:e_hi])
+    # swap a different graph in at the same path (atomic-replace style);
+    # force the mtime forward so coarse filesystem clocks can't hide it
+    gv2, _, oracle2 = _snapshot(tmp_path, "swap2", seed=2, e=350)
+    os.replace(gv2, gv)
+    st = os.stat(gv)
+    os.utime(gv, ns=(st.st_atime_ns, st.st_mtime_ns + 1_000_000_000))
+    got2 = c.query(gv, "neighbors", vertex=7)
+    e_lo, e_hi = int(oracle2.offsets[7]), int(oracle2.offsets[8])
+    assert np.array_equal(got2, oracle2.targets[e_lo:e_hi])
+    assert c.stats()["invalidations"] == 1
+    assert c.stats()["misses"] == 2
+
+
+def test_explicit_invalidate(tmp_path):
+    p0, _, _ = _snapshot(tmp_path, "i0")
+    p1, _, _ = _snapshot(tmp_path, "i1", seed=1)
+    c = SourceCache(capacity=4)
+    c.get(p0), c.get(p0, weighted=False), c.get(p1)
+    assert len(c) == 3
+    assert c.invalidate(p0) == 2          # both kwarg variants drop
+    assert len(c) == 1 and p1 in c
+    assert c.invalidate(p0) == 0
+    c.clear()
+    assert len(c) == 0
+
+
+# ---- single-flight + threaded hammer -----------------------------------------
+
+def test_cold_open_is_single_flight(tmp_path):
+    gv, _, _ = _snapshot(tmp_path, "g")
+    opens = []
+    gate = threading.Event()
+
+    def slow_open(path, **kw):
+        opens.append(path)
+        gate.wait(5)                      # hold every waiter on the opener
+        return open_graph(path, **kw)
+
+    c = SourceCache(capacity=2, open_fn=slow_open)
+    got = []
+    threads = [threading.Thread(target=lambda: got.append(c.get(gv)))
+               for _ in range(8)]
+    for t in threads:
+        t.start()
+    while not opens:                      # first thread reached the open
+        pass
+    gate.set()
+    for t in threads:
+        t.join()
+    assert len(opens) == 1, "double-open on a cold path"
+    assert len(got) == 8 and all(g is got[0] for g in got)
+
+
+def test_threaded_hammer_mixed_ops(tmp_path):
+    corpus = [_snapshot(tmp_path, f"h{i}", seed=i, weighted=(i % 2 == 0))
+              for i in range(3)]
+    opens = []
+    lock = threading.Lock()
+
+    def counting_open(path, **kw):
+        with lock:
+            opens.append(path)
+        return open_graph(path, **kw)
+
+    c = SourceCache(capacity=len(corpus), open_fn=counting_open)
+    start = threading.Barrier(8)
+    errors = []
+
+    def worker(wid):
+        rng = np.random.default_rng(wid)
+        try:
+            start.wait()
+            for _ in range(120):
+                gv, v, oracle = corpus[rng.integers(0, len(corpus))]
+                op = rng.integers(0, 4)
+                u = int(rng.integers(0, v))
+                e_lo, e_hi = int(oracle.offsets[u]), int(oracle.offsets[u + 1])
+                if op == 0:
+                    got = c.query(gv, "neighbors", vertex=u)
+                    assert np.array_equal(got, oracle.targets[e_lo:e_hi])
+                elif op == 1:
+                    assert c.query(gv, "degree", vertex=u) == e_hi - e_lo
+                elif op == 2:
+                    hi = min(v, u + int(rng.integers(1, 9)))
+                    part = c.query(gv, "rows", rows=(u, hi))
+                    lo_e = int(oracle.offsets[u])
+                    hi_e = int(oracle.offsets[hi])
+                    assert np.array_equal(part.targets,
+                                          oracle.targets[lo_e:hi_e])
+                    assert np.array_equal(
+                        part.offsets,
+                        oracle.offsets[u:hi + 1] - oracle.offsets[u])
+                else:
+                    full = c.query(gv, "csr")
+                    assert np.array_equal(full.offsets, oracle.offsets)
+        except Exception as exc:          # pragma: no cover - failure path
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors[:3]
+    # capacity covers the corpus and nothing was swapped: every path
+    # opened exactly once across all 8 threads — no double-open
+    assert sorted(opens) == sorted(p for p, _, _ in corpus)
+    st = c.stats()
+    assert st["misses"] == len(corpus)
+    assert st["hits"] == 8 * 120 - len(corpus)
+    assert st["evictions"] == 0
+
+
+# ---- query dispatch ----------------------------------------------------------
+
+def test_query_ops_and_validation(tmp_path):
+    gv, v, oracle = _snapshot(tmp_path, "q", weighted=True)
+    c = SourceCache(capacity=2)
+    info = c.query(gv, "info")
+    assert info.num_vertices == v
+    assert info.section_frames["csr_offsets"] >= 1
+    full = c.query(gv, "csr")
+    assert np.array_equal(full.offsets, oracle.offsets)
+    el = c.query(gv, "edgelist")
+    assert int(el.num_edges) == int(oracle.offsets[-1])
+    ids, w = c.query(gv, "neighbors", vertex=3, with_weights=True)
+    e_lo, e_hi = int(oracle.offsets[3]), int(oracle.offsets[4])
+    assert np.array_equal(w, oracle.weights[e_lo:e_hi])
+    with pytest.raises(ValueError, match="rows"):
+        c.query(gv, "rows")
+    with pytest.raises(ValueError, match="vertex"):
+        c.query(gv, "neighbors")
+    with pytest.raises(ValueError, match="vertex"):
+        c.query(gv, "degree")
+    with pytest.raises(ValueError, match="unknown query op"):
+        c.query(gv, "pagerank")
+
+
+def test_module_level_query_uses_default_cache(tmp_path):
+    gv, v, oracle = _snapshot(tmp_path, "m")
+    before = default_cache().stats()["misses"]
+    got = query(gv, "degree", vertex=5)
+    assert got == int(oracle.offsets[6]) - int(oracle.offsets[5])
+    assert default_cache() is default_cache()
+    assert default_cache().stats()["misses"] == before + 1
+    default_cache().invalidate(gv)        # don't leak tmp handles
+
+
+# ---- instrumented codec counter ----------------------------------------------
+
+def test_cached_row_query_decodes_only_touched_frames(tmp_path, monkeypatch):
+    gv, v, oracle = _snapshot(tmp_path, "frames", weighted=False)
+    calls = []
+    real_frame, real_full = codecs.decode_frame, codecs.decompress_frames
+
+    def frame_spy(payload, entry, codec, **kw):
+        calls.append((kw.get("context", ""), entry.index))
+        return real_frame(payload, entry, codec, **kw)
+
+    monkeypatch.setattr(codecs, "decode_frame", frame_spy)
+    monkeypatch.setattr(
+        codecs, "decompress_frames",
+        lambda *a, **kw: calls.append(("FULL", -1)) or real_full(*a, **kw))
+
+    c = SourceCache(capacity=2)
+    frames = c.query(gv, "info").section_frames
+    assert frames["csr_indices"] > 3
+    n0 = len(calls)
+    part = c.query(gv, "rows", rows=(20, 24))
+    e_lo, e_hi = int(oracle.offsets[20]), int(oracle.offsets[24])
+    assert np.array_equal(part.targets, oracle.targets[e_lo:e_hi])
+    assert not [1 for ctx, _ in calls if ctx == "FULL"]
+    expect_off = {i for i in range(frames["csr_offsets"])
+                  if i * FRAME_BETA < 25 * 8 and (i + 1) * FRAME_BETA > 20 * 8}
+    expect_idx = {i for i in range(frames["csr_indices"])
+                  if i * FRAME_BETA < e_hi * 4
+                  and (i + 1) * FRAME_BETA > e_lo * 4}
+    by_sec = {}
+    for ctx, idx in calls[n0:]:
+        by_sec.setdefault(ctx.rsplit(" ", 1)[1], set()).add(idx)
+    assert by_sec == {"4": expect_off, "5": expect_idx}
+    # a repeat through the cache is decode-free: the handle (and its
+    # frame cache) survived in the LRU
+    n1 = len(calls)
+    c.query(gv, "rows", rows=(20, 24))
+    c.query(gv, "neighbors", vertex=22)
+    assert len(calls) == n1

@@ -1,0 +1,343 @@
+"""Selective loading: ``.csr(rows=)`` / ``.neighbors(v)`` / ``.degree(v)``
+parity against full ``csr_np`` oracle slices across {raw, zlib-framed,
+zstd-framed} x weighted x base, edge rows (empty range, single vertex,
+last vertex, isolated vertices, frame-boundary spans, full-range ==
+``.csr()`` bitwise), fallback paths (text, edgelist-only snapshots,
+``num_vertices`` overrides), the snapshot-engine selective hooks, and a
+slice-of-full == partial-load Hypothesis property."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (codecs, get_engine, load_edgelist, open_graph,
+                        save_snapshot)
+from repro.core.build import csr_np
+from repro.core.csr import convert_to_csr
+from repro.core.generate import write_edgelist
+from repro.core.snapshot import SnapshotError
+from repro.core.source import slice_csr
+
+FMTS = ["raw", "zlib", "zstd"]
+# small frames force multi-frame sections so row ranges exercise the
+# seek-and-decode path, not a degenerate one-frame stream
+FRAME_BETA = 96
+
+
+def _graph(tmp_path, *, weighted, base, seed=0, v=60, e=400):
+    """Random multigraph; the last 3 vertices are never endpoints, so
+    every snapshot has isolated rows at the tail."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, v - 3, e)
+    dst = rng.integers(0, v - 3, e)
+    w = (rng.random(e) * 9).round(3).astype(np.float32) if weighted else None
+    path = str(tmp_path / f"g_{weighted}_{base}_{seed}.el")
+    write_edgelist(path, src, dst, w, base=base)
+    oracle = csr_np(src.astype(np.int32), dst.astype(np.int32), w, v)
+    return path, v, oracle
+
+
+def _snapshot(tmp_path, fmt, *, weighted=False, base=1, seed=0,
+              frame_beta=FRAME_BETA, v=60, e=400):
+    if fmt == "zstd":
+        pytest.importorskip("zstandard")
+    path, v, oracle = _graph(tmp_path, weighted=weighted, base=base,
+                             seed=seed, v=v, e=e)
+    el = load_edgelist(path, engine="numpy", weighted=weighted,
+                       num_vertices=v, base=base)
+    gv = str(tmp_path / f"q_{fmt}_{weighted}_{base}_{seed}.gvel")
+    save_snapshot(gv, edgelist=el, csr=convert_to_csr(el, engine="numpy"),
+                  compress=None if fmt == "raw" else fmt,
+                  frame_beta=frame_beta)
+    return gv, v, oracle
+
+
+def _expect(oracle, lo, hi):
+    e_lo, e_hi = int(oracle.offsets[lo]), int(oracle.offsets[hi])
+    off = oracle.offsets[lo:hi + 1] - oracle.offsets[lo]
+    w = None if oracle.weights is None else oracle.weights[e_lo:e_hi]
+    return off, oracle.targets[e_lo:e_hi], w
+
+
+def _assert_rows(part, oracle, lo, hi):
+    off, tgt, w = _expect(oracle, lo, hi)
+    assert part.row_start == lo
+    assert part.num_vertices == oracle.num_vertices
+    assert part.offsets.dtype == oracle.offsets.dtype
+    assert part.targets.dtype == oracle.targets.dtype
+    assert np.array_equal(part.offsets, off)
+    assert np.array_equal(part.targets, tgt)
+    if w is None:
+        assert part.weights is None
+    else:
+        assert part.weights.dtype == w.dtype
+        assert np.array_equal(part.weights, w)
+
+
+# ---- parity matrix: formats x weighted x base --------------------------------
+
+@pytest.mark.parametrize("fmt", FMTS)
+@pytest.mark.parametrize("weighted", [False, True])
+@pytest.mark.parametrize("base", [0, 1])
+def test_rows_and_points_parity(tmp_path, fmt, weighted, base):
+    gv, v, oracle = _snapshot(tmp_path, fmt, weighted=weighted, base=base)
+    s = open_graph(gv)
+    ranges = [(7, 7),            # empty
+              (0, 0),            # empty at the origin
+              (5, 6),            # single vertex
+              (v - 1, v),        # last vertex (isolated)
+              (v - 3, v),        # the all-isolated tail
+              (17, 43),          # interior span
+              (0, v)]            # full range
+    for lo, hi in ranges:
+        _assert_rows(s.csr(rows=(lo, hi)), oracle, lo, hi)
+    for u in (0, 5, 29, v - 3, v - 1):
+        e_lo, e_hi = int(oracle.offsets[u]), int(oracle.offsets[u + 1])
+        assert np.array_equal(s.neighbors(u), oracle.targets[e_lo:e_hi])
+        assert s.degree(u) == e_hi - e_lo
+        if weighted:
+            ids, w = s.neighbors(u, with_weights=True)
+            assert np.array_equal(ids, oracle.targets[e_lo:e_hi])
+            assert np.array_equal(w, oracle.weights[e_lo:e_hi])
+    for u in (v - 3, v - 2, v - 1):       # isolated: empty, degree 0
+        assert s.neighbors(u).size == 0
+        assert s.degree(u) == 0
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_full_range_matches_csr_bitwise(tmp_path, fmt):
+    gv, v, _ = _snapshot(tmp_path, fmt, weighted=True)
+    s = open_graph(gv)
+    full, part = s.csr(), s.csr(rows=(0, v))
+    assert part.row_start == 0
+    for a, b in ((full.offsets, part.offsets), (full.targets, part.targets),
+                 (full.weights, part.weights)):
+        assert a.dtype == b.dtype
+        assert a.tobytes() == b.tobytes()
+
+
+def test_range_object_and_pair_equivalent(tmp_path):
+    gv, v, oracle = _snapshot(tmp_path, "zlib")
+    s = open_graph(gv)
+    a, b = s.csr(rows=range(11, 37)), s.csr(rows=(11, 37))
+    assert np.array_equal(a.offsets, b.offsets)
+    assert np.array_equal(a.targets, b.targets)
+    _assert_rows(a, oracle, 11, 37)
+
+
+def test_raw_rows_are_mmap_views(tmp_path):
+    """Raw snapshots serve row slices zero-copy: two slices of the same
+    handle are windows into one mapping, and are read-only."""
+    gv, v, _ = _snapshot(tmp_path, "raw")
+    s = open_graph(gv)
+    a, b = s.csr(rows=(0, v)), s.csr(rows=(10, 20))
+    assert np.shares_memory(a.targets, b.targets)
+    assert not a.targets.flags.writeable
+    with pytest.raises(ValueError):
+        b.targets[0] = 1
+
+
+# ---- validation --------------------------------------------------------------
+
+def test_bad_rows_rejected(tmp_path):
+    gv, v, _ = _snapshot(tmp_path, "raw")
+    s = open_graph(gv)
+    with pytest.raises(ValueError):
+        s.csr(rows=range(0, 10, 2))          # stride
+    with pytest.raises(ValueError):
+        s.csr(rows=(7, 3))                   # reversed
+    with pytest.raises(ValueError):
+        s.csr(rows="0:10")                   # not a range
+    with pytest.raises(IndexError):
+        s.csr(rows=(0, v + 1))
+    with pytest.raises(IndexError):
+        s.csr(rows=(-1, 3))
+    for u in (-1, v):
+        with pytest.raises(IndexError):
+            s.neighbors(u)
+        with pytest.raises(IndexError):
+            s.degree(u)
+
+
+def test_with_weights_on_unweighted_raises(tmp_path):
+    gv, _, _ = _snapshot(tmp_path, "zlib", weighted=False)
+    s = open_graph(gv)
+    with pytest.raises(ValueError, match="unweighted"):
+        s.neighbors(3, with_weights=True)
+
+
+# ---- fallback paths: same results without the selective fast path ------------
+
+def test_text_source_fallback_parity(tmp_path):
+    path, v, oracle = _graph(tmp_path, weighted=True, base=1)
+    s = open_graph(path, engine="numpy", weighted=True, num_vertices=v)
+    _assert_rows(s.csr(rows=(9, 31)), oracle, 9, 31)
+    _assert_rows(s.csr(rows=(0, v)), oracle, 0, v)
+    u = 13
+    e_lo, e_hi = int(oracle.offsets[u]), int(oracle.offsets[u + 1])
+    assert np.array_equal(s.neighbors(u), oracle.targets[e_lo:e_hi])
+    ids, w = s.neighbors(u, with_weights=True)
+    assert np.array_equal(w, oracle.weights[e_lo:e_hi])
+    assert s.degree(u) == e_hi - e_lo
+    with pytest.raises(IndexError):
+        s.neighbors(v)
+
+
+def test_edgelist_only_snapshot_falls_back(tmp_path):
+    path, v, oracle = _graph(tmp_path, weighted=False, base=1)
+    el = load_edgelist(path, engine="numpy", num_vertices=v)
+    gv = str(tmp_path / "el_only.gvel")
+    save_snapshot(gv, edgelist=el, compress="zlib")
+    s = open_graph(gv)
+    _assert_rows(s.csr(rows=(4, 25)), oracle, 4, 25)
+    assert s.degree(7) == int(oracle.offsets[8]) - int(oracle.offsets[7])
+
+
+def test_num_vertices_override_falls_back(tmp_path):
+    """A forced num_vertices that disagrees with the header routes to
+    the full build (padded rows), not the stored CSR."""
+    gv, v, oracle = _snapshot(tmp_path, "raw")
+    s = open_graph(gv, num_vertices=v + 5)
+    part = s.csr(rows=(v, v + 5))            # rows past the header's V
+    assert part.num_rows == 5
+    assert part.targets.size == 0
+    assert np.array_equal(part.offsets, np.zeros(6, np.int64))
+    mid = s.csr(rows=(17, 43))
+    off, tgt, _ = _expect(oracle, 17, 43)    # padded rows don't shift these
+    assert mid.num_vertices == v + 5
+    assert np.array_equal(mid.offsets, off)
+    assert np.array_equal(mid.targets, tgt)
+
+
+def test_slice_csr_rejects_local_csr(tmp_path):
+    gv, v, oracle = _snapshot(tmp_path, "raw")
+    part = open_graph(gv).csr(rows=(5, 20))
+    with pytest.raises(ValueError, match="row_start"):
+        slice_csr(part, 0, 5)
+
+
+# ---- engine-level selective hooks --------------------------------------------
+
+def test_snapshot_engine_hooks(tmp_path):
+    gv, v, oracle = _snapshot(tmp_path, "zlib", weighted=True)
+    eng = get_engine("snapshot")
+    part = eng.read_csr_rows(gv, 10, 30, weighted=True)
+    _assert_rows(part, oracle, 10, 30)
+    ids, w = eng.read_neighbors(gv, 12, weighted=True)
+    e_lo, e_hi = int(oracle.offsets[12]), int(oracle.offsets[13])
+    assert np.array_equal(ids, oracle.targets[e_lo:e_hi])
+    assert np.array_equal(w, oracle.weights[e_lo:e_hi])
+    assert eng.read_degree(gv, 12) == e_hi - e_lo
+    # no CSR sections / V mismatch -> None (callers fall back)
+    path, v2, _ = _graph(tmp_path, weighted=False, base=1, seed=5)
+    el = load_edgelist(path, engine="numpy", num_vertices=v2)
+    el_only = str(tmp_path / "hooks_el.gvel")
+    save_snapshot(el_only, edgelist=el)
+    assert eng.read_csr_rows(el_only, 0, 5) is None
+    assert eng.read_neighbors(el_only, 0) is None
+    assert eng.read_degree(el_only, 0) is None
+    assert eng.read_csr_rows(gv, 0, 5, num_vertices=v + 1) is None
+
+
+# ---- partial decode: only the frames the span touches ------------------------
+
+def _spy_decodes(monkeypatch):
+    calls = []
+    real_frame, real_full = codecs.decode_frame, codecs.decompress_frames
+
+    def frame_spy(payload, entry, codec, **kw):
+        calls.append(("frame", kw.get("context", ""), entry.index))
+        return real_frame(payload, entry, codec, **kw)
+
+    def full_spy(*a, **kw):
+        calls.append(("full", kw.get("context", ""), -1))
+        return real_full(*a, **kw)
+
+    monkeypatch.setattr(codecs, "decode_frame", frame_spy)
+    monkeypatch.setattr(codecs, "decompress_frames", full_spy)
+    return calls
+
+
+def test_row_range_decodes_only_touched_frames(tmp_path, monkeypatch):
+    gv, v, oracle = _snapshot(tmp_path, "zlib", weighted=True)
+    frames = open_graph(gv).info().section_frames
+    assert frames["csr_indices"] > 3      # multi-frame, or the test is vacuous
+    calls = _spy_decodes(monkeypatch)
+    s = open_graph(gv)
+    _assert_rows(s.csr(rows=(20, 24)), oracle, 20, 24)
+    assert not [c for c in calls if c[0] == "full"], \
+        "partial read fell back to a full-section decode"
+    e_lo, e_hi = int(oracle.offsets[20]), int(oracle.offsets[24])
+    isz_off, isz_idx = 8, 4
+    expect_off = {i for i in range(frames["csr_offsets"])
+                  if i * FRAME_BETA < (24 + 1) * isz_off
+                  and (i + 1) * FRAME_BETA > 20 * isz_off}
+    expect_idx = {i for i in range(frames["csr_indices"])
+                  if i * FRAME_BETA < e_hi * isz_idx
+                  and (i + 1) * FRAME_BETA > e_lo * isz_idx}
+    by_sec = {}
+    for kind, ctx, idx in calls:
+        by_sec.setdefault(ctx.rsplit(" ", 1)[1], set()).add(idx)
+    assert by_sec["4"] == expect_off       # SEC_CSR_OFFSETS
+    assert by_sec["5"] == expect_idx       # SEC_CSR_INDICES
+    assert set(by_sec) <= {"4", "5", "6"}  # never an edgelist section
+    n = len(calls)
+    _assert_rows(s.csr(rows=(20, 24)), oracle, 20, 24)   # repeat: cached
+    assert len(calls) == n
+
+
+def test_point_read_decodes_no_weight_frames(tmp_path, monkeypatch):
+    gv, v, oracle = _snapshot(tmp_path, "zlib", weighted=True)
+    calls = _spy_decodes(monkeypatch)
+    open_graph(gv).neighbors(30)
+    secs = {c[1].rsplit(" ", 1)[1] for c in calls}
+    assert "6" not in secs                 # SEC_CSR_WEIGHTS untouched
+
+
+def test_frame_boundary_spanning_range(tmp_path, monkeypatch):
+    """A range whose byte span crosses a frame boundary assembles from
+    both frames — and only those."""
+    gv, v, oracle = _snapshot(tmp_path, "zlib", frame_beta=64)
+    # offsets are 8 bytes: rows [6, 10) span bytes [48, 88) -> frames 0+1
+    calls = _spy_decodes(monkeypatch)
+    s = open_graph(gv)
+    _assert_rows(s.csr(rows=(6, 10)), oracle, 6, 10)
+    off_frames = {i for k, c, i in calls if c.endswith(" 4")}
+    assert off_frames == {0, 1}
+
+
+# ---- property: slice-of-full == partial-load ---------------------------------
+
+def test_rows_property_slice_equals_partial(tmp_path):
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    built = {}
+
+    def snap_for(seed, weighted):
+        key = (seed, weighted)
+        if key not in built:
+            built[key] = _snapshot(tmp_path, "zlib", weighted=weighted,
+                                   seed=seed, frame_beta=64,
+                                   v=40, e=40 + (seed * 67) % 260)
+        return built[key]
+
+    @settings(max_examples=60, deadline=None,
+              suppress_health_check=[HealthCheck.function_scoped_fixture])
+    @given(st.integers(0, 5), st.booleans(),
+           st.integers(0, 40), st.integers(0, 40))
+    def prop(seed, weighted, a, b):
+        gv, v, oracle = snap_for(seed, weighted)
+        lo, hi = min(a, b), max(a, b)
+        s = open_graph(gv)
+        part = s.csr(rows=(lo, hi))
+        whole = slice_csr(s.csr(), lo, hi)
+        assert np.array_equal(part.offsets, whole.offsets)
+        assert np.array_equal(part.targets, whole.targets)
+        if weighted:
+            assert np.array_equal(part.weights, whole.weights)
+        else:
+            assert part.weights is None
+        _assert_rows(part, oracle, lo, hi)
+
+    prop()
