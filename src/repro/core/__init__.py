@@ -29,6 +29,11 @@ Public API:
                                            autotuning for the streaming
                                            engines (open_graph(tune=True);
                                            docs/performance.md)
+    env                                  — platform configuration (x64,
+                                           backend, forced host devices,
+                                           XLA flags) and the platform
+                                           fingerprint keying tune
+                                           profiles
     SourceCache, query, default_cache    — process-level hot-graph cache: a
                                            bounded LRU of open GraphSources
                                            serving point/range/full queries
@@ -50,7 +55,7 @@ from .codecs import (register_codec, get_codec, available_codecs,
 from .generate import make_graph_file, rmat_edges, uniform_edges, grid_edges, write_edgelist
 from .distributed import (load_csr_sharded, load_csr_sharded_stream,
                           host_shard_and_load)
-from . import (baselines, build, cache, codecs, compat, degrees, loader,
+from . import (baselines, build, cache, codecs, compat, degrees, env, loader,
                parse, parse_np, blocks, snapshot, source, tune)
 
 __all__ = [
@@ -69,5 +74,5 @@ __all__ = [
     "write_edgelist",
     "load_csr_sharded", "load_csr_sharded_stream", "host_shard_and_load",
     "baselines", "build", "cache", "codecs", "compat", "degrees", "loader",
-    "parse", "parse_np", "blocks", "snapshot", "source", "tune",
+    "parse", "parse_np", "blocks", "snapshot", "source", "tune", "env",
 ]

@@ -128,28 +128,35 @@ class SourceCache:
             if not opener:
                 pending.event.wait()
                 if pending.source is not None:
+                    # served the opener's handle: a hit, like any other
+                    # request answered without opening the file
+                    with self._lock:
+                        self._hits += 1
                     return pending.source
                 # the opener failed; retry (surfacing our own error)
                 continue
+            # the pending event MUST be set on every exit from this
+            # opener block — an exception anywhere (the open itself, or
+            # bookkeeping after it) that skipped the set would leave
+            # every waiter blocked forever on a slot nobody owns
             try:
                 source = self._open_fn(path, **open_kw)
+                pending.source = source
+                with self._lock:
+                    self._misses += 1
+                    self._entries[slot] = _Entry(key, source)
+                    self._entries.move_to_end(slot)
+                    while len(self._entries) > self.capacity:
+                        self._entries.popitem(last=False)
+                        self._evictions += 1
+                return source
             except BaseException as exc:
                 pending.error = exc
+                raise
+            finally:
                 with self._lock:
                     self._pending.pop(slot, None)
                 pending.event.set()
-                raise
-            with self._lock:
-                self._pending.pop(slot, None)
-                self._misses += 1
-                self._entries[slot] = _Entry(key, source)
-                self._entries.move_to_end(slot)
-                while len(self._entries) > self.capacity:
-                    self._entries.popitem(last=False)
-                    self._evictions += 1
-            pending.source = source
-            pending.event.set()
-            return source
 
     def query(self, path: str, op: str, *, rows=None, vertex=None,
               method: str = "staged", rho: int = 4,
@@ -221,16 +228,28 @@ class SourceCache:
         with self._lock:
             return any(s[0] == str(path) for s in self._entries)
 
-    def stats(self) -> Dict[str, int]:
+    def stats(self) -> Dict[str, Any]:
         """Counters since construction: ``hits``/``misses`` (misses ==
         opens that were cached), ``evictions`` (capacity),
-        ``invalidations`` (stat-key changes + explicit), ``size``."""
+        ``invalidations`` (stat-key changes + explicit), ``size``, and
+        ``frame_cache`` — the decoded-frame memo counters summed over
+        the hot handles' pinned snapshots (bytes held, hits, LRU
+        evictions past ``snapshot.FRAME_CACHE_BYTES``), the memory the
+        selective-read path pins on this cache's behalf."""
         with self._lock:
+            frame = {"frames": 0, "bytes": 0, "hits": 0, "evictions": 0}
+            for ent in self._entries.values():
+                fc = getattr(ent.source, "frame_cache_stats", None)
+                fc = fc() if callable(fc) else None
+                if fc:
+                    for k in frame:
+                        frame[k] += fc.get(k, 0)
             return {"hits": self._hits, "misses": self._misses,
                     "evictions": self._evictions,
                     "invalidations": self._invalidations,
                     "size": len(self._entries),
-                    "capacity": self.capacity}
+                    "capacity": self.capacity,
+                    "frame_cache": frame}
 
 
 _default: Optional[SourceCache] = None

@@ -21,19 +21,27 @@ def convert_to_csr(
     *,
     method: str = "staged",
     rho: int = 4,
+    bin_bits: Optional[int] = None,
     engine: str = "jax",
 ) -> CSR:
     """Convert an in-memory EdgeList to CSR.
 
-    method: 'global' (single-stage baseline) | 'staged' (GVEL, rho partitions)
+    method: 'global' (single-stage baseline) | 'staged' (GVEL, rho
+    partitions) | 'binned' (propagation-blocking bins of 2**bin_bits
+    vertices)
     engine: 'jax' | 'numpy'
     """
+    method = method or "staged"
     n = int(el.num_edges)
     v = el.num_vertices
     weighted = el.weights is not None
     if engine == "numpy":
-        return build.csr_np(np.asarray(el.src[:n]), np.asarray(el.dst[:n]),
-                            None if not weighted else np.asarray(el.weights[:n]), v)
+        s = np.asarray(el.src[:n])
+        d = np.asarray(el.dst[:n])
+        w = None if not weighted else np.asarray(el.weights[:n])
+        if method == "binned":
+            return build.csr_binned_np(s, d, w, v, bin_bits=bin_bits)
+        return build.csr_np(s, d, w, v)
     src = jnp.asarray(el.src[:n])
     dst = jnp.asarray(el.dst[:n])
     w = jnp.asarray(el.weights[:n]) if weighted else None
@@ -41,6 +49,10 @@ def convert_to_csr(
         offsets, targets, ww = build.csr_global(src, dst, w, v, weighted=weighted)
     elif method == "staged":
         offsets, targets, ww = build.csr_staged(src, dst, w, v, rho=rho,
+                                                weighted=weighted)
+    elif method == "binned":
+        offsets, targets, ww = build.csr_binned(src, dst, w, v,
+                                                bin_bits=bin_bits,
                                                 weighted=weighted)
     else:
         raise ValueError(f"unknown method {method!r}")
@@ -57,6 +69,7 @@ def read_csr(
     num_vertices: Optional[int] = None,
     method: str = "staged",
     rho: int = 4,
+    bin_bits: Optional[int] = None,
     engine: str = "jax",
     **reader_kwargs,
 ) -> CSR:
@@ -71,7 +84,7 @@ def read_csr(
     return load_csr(path, engine="device" if engine == "jax" else engine,
                     weighted=weighted, symmetric=symmetric, base=base,
                     num_vertices=num_vertices, method=method, rho=rho,
-                    **reader_kwargs)
+                    bin_bits=bin_bits, **reader_kwargs)
 
 
 def csr_to_dense(csr: CSR) -> np.ndarray:

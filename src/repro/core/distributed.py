@@ -128,12 +128,20 @@ def build_local_csr(
     rows_per_shard: int,
     axis: str,
     rho: int = 4,
+    method: str = "staged",
+    bin_bits: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
-    """Shard-local body: staged CSR over this shard's owned vertex range."""
+    """Shard-local body: rank-based CSR (``staged`` or ``binned``) over
+    this shard's owned vertex range."""
     my = jax.lax.axis_index(axis)
     local = jnp.where(src >= 0, src - my * rows_per_shard, -1)
-    offsets, targets, ww = build.csr_staged(
-        local, dst, w, rows_per_shard, rho=rho, weighted=w is not None)
+    if method == "binned":
+        offsets, targets, ww = build.csr_binned(
+            local, dst, w, rows_per_shard, bin_bits=bin_bits,
+            weighted=w is not None)
+    else:
+        offsets, targets, ww = build.csr_staged(
+            local, dst, w, rows_per_shard, rho=rho, weighted=w is not None)
     return offsets, targets, ww
 
 
@@ -146,6 +154,8 @@ def load_csr_sharded(
     *,
     num_vertices: int,
     rho: int = 4,
+    method: str = "staged",
+    bin_bits: Optional[int] = None,
     send_cap: Optional[int] = None,
     edge_limit: Optional[int] = None,
 ) -> CSR:
@@ -180,7 +190,7 @@ def load_csr_sharded(
 
     weighted = w is not None
     fn = _exchange_build_fn(mesh, axis, d, rows, int(send_cap), rho,
-                            weighted, lim)
+                            weighted, lim, method, bin_bits)
     win = w if weighted else jnp.zeros((), jnp.float32)
     off, tgt, tw, ovf = fn(src, dst, win)
     ovf_h = np.asarray(ovf)
@@ -198,7 +208,9 @@ def load_csr_sharded(
 @functools.lru_cache(maxsize=64)
 def _exchange_build_fn(mesh: Mesh, axis: str, d: int, rows: int,
                        send_cap: int, rho: int, weighted: bool,
-                       edge_limit: Optional[int] = None):
+                       edge_limit: Optional[int] = None,
+                       method: str = "staged",
+                       bin_bits: Optional[int] = None):
     """The jitted exchange+build program for one (mesh, geometry) combo.
 
     shard_map over a fresh closure defeats jax's jit cache (new function
@@ -216,7 +228,8 @@ def _exchange_build_fn(mesh: Mesh, axis: str, d: int, rows: int,
             s, dd, ww, num_shards=d, rows_per_shard=rows,
             axis=axis, send_cap=send_cap)
         off, tgt, tw = build_local_csr(rs, rd, rw, rows_per_shard=rows,
-                                       axis=axis, rho=rho)
+                                       axis=axis, rho=rho, method=method,
+                                       bin_bits=bin_bits)
         if tw is None:
             tw = jnp.zeros_like(tgt, jnp.float32)
         return off[None], tgt[None], tw[None], ovf[None]
@@ -394,6 +407,8 @@ def load_csr_sharded_stream(
     weighted: bool = False,
     base: int = 1,
     rho: int = 4,
+    method: str = "staged",
+    bin_bits: Optional[int] = None,
     offset: int = 0,
     send_cap: Optional[int] = None,
     parse: str = "xla",
@@ -436,6 +451,7 @@ def load_csr_sharded_stream(
         send_cap = _cap_round(peak)
     return load_csr_sharded(mesh, axis, src, dst, w,
                             num_vertices=num_vertices, rho=rho,
+                            method=method, bin_bits=bin_bits,
                             send_cap=send_cap, edge_limit=edge_limit)
 
 

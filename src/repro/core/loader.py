@@ -14,8 +14,9 @@ name from the registry:
     ==========  ================================================
     device      streaming double-buffered block pipeline ->
                 jitted ``parse_blocks`` -> packed device buffers
-    pallas      same pipeline, but parsing runs in the
-                ``kernels.parse_edges`` Pallas kernel
+    pallas      same pipeline, but parsing runs through
+                ``kernels.parse_edges.parse_edges_accumulate``
+                (the Mosaic kernel on TPU, its XLA twin elsewhere)
     numpy       single-pass vectorized numpy parser (host)
     threads     thread pool over newline-aligned chunks (host)
     snapshot    zero-parse mmap of a binary ``.gvel`` snapshot
@@ -35,14 +36,15 @@ The device/pallas engines are *streaming* (GVEL's pipelined read):
      device accumulators at the running offset, with the accumulator
      buffers *donated* so the update is in-place — per-block parse
      outputs never materialize between programs and the capacity-sized
-     buffers are not copied per batch (the pallas engine keeps its
-     kernel parse + a donated ``_accumulate_batch``);
+     buffers are not copied per batch (the pallas engine runs the same
+     fused-donated shape through ``kernels.parse_edges``);
   3. the final short batch runs a remainder-sized program instead of
      being padded with ``NEWLINE`` blocks to ``batch_blocks`` — small
      inputs don't pay full-batch parse cost for padding;
   4. ``load_csr`` hands the packed device buffers straight to the
-     rank-based CSR builders (``build.csr_global``/``csr_staged``), so
-     file -> CSR never materializes a host-side EdgeList.
+     rank-based CSR builders (``build.csr_global``/``csr_staged``/
+     ``csr_binned``), so file -> CSR never materializes a host-side
+     EdgeList.
 
 Block geometry (``beta`` x ``batch_blocks``) defaults to
 ``DEFAULT_BETA``/``DEFAULT_BATCH_BLOCKS`` and can be *measured* instead:
@@ -114,6 +116,12 @@ class LoadOptions:
     measured per-host profile (:mod:`repro.core.tune`); explicit
     ``engine_kw`` values always win, and non-streaming engines ignore
     it.
+
+    ``method``/``bin_bits`` pick the CSR build strategy for every
+    ``.csr()``-family product off this handle (``method=None`` means the
+    per-call default, ``staged``); a per-call ``method=`` always wins.
+    ``bin_bits`` is the binned build's vertex-range width knob and is
+    ignored by the sort-based methods.
     """
 
     engine: Optional[str] = None
@@ -123,16 +131,21 @@ class LoadOptions:
     num_vertices: Optional[int] = None
     offset: int = 0
     tune: bool = False
+    method: Optional[str] = None
+    bin_bits: Optional[int] = None
     engine_kw: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     _OWN_FIELDS = ("engine", "weighted", "symmetric", "base",
-                   "num_vertices", "offset", "tune")
+                   "num_vertices", "offset", "tune", "method", "bin_bits")
 
     def __post_init__(self):
         if self.base not in (0, 1):
             raise ValueError(f"base must be 0 or 1, got {self.base!r}")
         if self.offset < 0:
             raise ValueError(f"offset must be >= 0, got {self.offset!r}")
+        if self.method not in (None, "global", "staged", "binned"):
+            raise ValueError(f"unknown method {self.method!r}; expected "
+                             f"'global', 'staged' or 'binned'")
         dup = sorted(set(self.engine_kw) & set(self._OWN_FIELDS))
         if dup:
             raise ValueError(f"option(s) {dup} passed both named and via "
@@ -236,9 +249,11 @@ def _accumulate_batch(acc_src, acc_dst, acc_w, total, src_b, dst_b, w_b,
     The device-side analogue of gluing per-thread edgelists: an exclusive
     scan over per-block counts gives each block a disjoint destination
     range starting at ``total``.  Replaces the old per-batch
-    device->numpy copy + final np.concatenate.  Used by the pallas
-    engine (whose parse is the separate kernel program); the device
-    engine's fused path is :func:`repro.core.parse.parse_accumulate`.
+    device->numpy copy + final np.concatenate.  Kept as the two-step
+    reference pipeline (the fused-loader parity tests pin it); both
+    streaming engines now run fused —
+    :func:`repro.core.parse.parse_accumulate` for ``device``,
+    ``kernels.parse_edges.parse_edges_accumulate`` for ``pallas``.
 
     ``donate=None`` probes the backend once and donates the accumulator
     buffers when supported, making the scatter in-place instead of
@@ -316,13 +331,10 @@ def _parse_span(
         nonlocal acc_src, acc_dst, acc_w, total
         nb = bufs.shape[0]          # < batch_blocks on the tail batch
         if parse == "pallas":
-            from ..kernels import parse_edges
-            src_b, dst_b, w_b, counts = parse_edges(
-                put(bufs), os_, oe, weighted=weighted, base=base,
-                edge_cap=edge_cap)
-            acc_src, acc_dst, acc_w, total = _accumulate_batch(
-                acc_src, acc_dst, acc_w, total, src_b, dst_b, w_b,
-                counts, cap=cap)
+            from ..kernels import parse_edges_accumulate
+            acc_src, acc_dst, acc_w, total = parse_edges_accumulate(
+                acc_src, acc_dst, acc_w, total, put(bufs), os_, oe,
+                weighted=weighted, base=base, edge_bound=nb * edge_cap)
         else:
             acc_src, acc_dst, acc_w, total = parse_accumulate(
                 acc_src, acc_dst, acc_w, total, put(bufs),
@@ -511,8 +523,9 @@ def read_edgelist_via(path: str, opts: LoadOptions) -> EdgeList:
     return el
 
 
-def read_csr_via(path: str, opts: LoadOptions, *, method: str = "staged",
-                 rho: int = 4,
+def read_csr_via(path: str, opts: LoadOptions, *,
+                 method: Optional[str] = None, rho: int = 4,
+                 bin_bits: Optional[int] = None,
                  fallback_edgelist: Optional[Callable[[], EdgeList]] = None,
                  ) -> CSR:
     """File -> CSR through ``opts.engine`` (must be concrete).
@@ -524,8 +537,11 @@ def read_csr_via(path: str, opts: LoadOptions, *, method: str = "staged",
     feed its memoized edgelist into that last route instead of
     re-reading the file.  Symmetric graphs always take the EdgeList
     route (reverse-edge expansion is a host concatenation today).
+    ``method=None`` falls back to ``opts.method``, then ``staged``.
     """
     opts = resolve_tuned(opts)
+    method = method or opts.method or "staged"
+    bin_bits = bin_bits if bin_bits is not None else opts.bin_bits
     weighted = bool(opts.weighted)
     eng = get_engine(opts.engine)
     if hasattr(eng, "read_csr_prebuilt") and not opts.symmetric:
@@ -554,6 +570,10 @@ def read_csr_via(path: str, opts: LoadOptions, *, method: str = "staged",
         elif method == "staged":
             offsets, targets, ww = build.csr_staged(
                 src, dst, w, num_vertices, rho=rho, weighted=weighted)
+        elif method == "binned":
+            offsets, targets, ww = build.csr_binned(
+                src, dst, w, num_vertices, bin_bits=bin_bits,
+                weighted=weighted)
         else:
             raise ValueError(f"unknown method {method!r}")
         return CSR(np.asarray(offsets).astype(np.int64),
@@ -563,12 +583,14 @@ def read_csr_via(path: str, opts: LoadOptions, *, method: str = "staged",
     from .csr import convert_to_csr
     el = (fallback_edgelist() if fallback_edgelist is not None
           else read_edgelist_via(path, opts))
-    return convert_to_csr(el, method=method, rho=rho,
+    return convert_to_csr(el, method=method, rho=rho, bin_bits=bin_bits,
                           engine=csr_convert_engine(opts.engine))
 
 
 def read_csr_sharded_via(path: str, opts: LoadOptions, *, mesh,
-                         axis: str = "data", rho: int = 4) -> CSR:
+                         axis: str = "data", rho: int = 4,
+                         method: Optional[str] = None,
+                         bin_bits: Optional[int] = None) -> CSR:
     """File -> mesh-sharded CSR through ``opts.engine`` (must be a
     streaming engine — the byte-range shard plan only exists for the
     block streaming pipeline).
@@ -597,6 +619,8 @@ def read_csr_sharded_via(path: str, opts: LoadOptions, *, mesh,
     from . import distributed
     return distributed.load_csr_sharded_stream(
         mesh, axis, path, num_vertices=opts.num_vertices, rho=rho,
+        method=method or opts.method or "staged",
+        bin_bits=bin_bits if bin_bits is not None else opts.bin_bits,
         parse=eng._parse, **opts.stream_kwargs())
 
 
@@ -644,6 +668,7 @@ def load_csr(
     num_vertices: Optional[int] = None,
     method: str = "staged",
     rho: int = 4,
+    bin_bits: Optional[int] = None,
     offset: int = 0,
     tune: bool = False,
     **engine_kw,
@@ -654,19 +679,21 @@ def load_csr(
     front door — equivalent to ``open_graph(path, ...).csr(...)``.
     Streaming engines (device, pallas) run fused: one jitted program
     per batch parses the blocks and accumulates the edges in packed
-    (donated) device buffers that feed ``csr_global``/``csr_staged``
-    directly — no host EdgeList in between.  ``tune=True`` fills
-    un-pinned streaming geometry from the measured per-host profile.
-    Host engines read an EdgeList and convert.  Binary ``.gvel`` files
-    are detected by magic and routed to the snapshot engine; an
-    embedded prebuilt CSR is served straight from mmap
-    (``method``/``rho`` do not apply — the stored CSR wins).
+    (donated) device buffers that feed the rank-based builders
+    (``csr_global``/``csr_staged``/``csr_binned``) directly — no host
+    EdgeList in between.  ``tune=True`` fills un-pinned streaming
+    geometry from the measured per-host profile.  Host engines read an
+    EdgeList and convert.  Binary ``.gvel`` files are detected by magic
+    and routed to the snapshot engine; an embedded prebuilt CSR is
+    served straight from mmap (``method``/``rho``/``bin_bits`` do not
+    apply — the stored CSR wins).
     """
     from .source import open_graph
     return open_graph(path, engine=engine, weighted=weighted,
                       symmetric=symmetric, base=base,
                       num_vertices=num_vertices, offset=offset, tune=tune,
-                      validate=False, **engine_kw).csr(method=method, rho=rho)
+                      validate=False, **engine_kw).csr(method=method, rho=rho,
+                                                       bin_bits=bin_bits)
 
 
 _register_builtin_engines()

@@ -18,22 +18,26 @@ carries `overlap` bytes of left context, and a line belongs to the block
 whose *owned byte range* contains the line's terminating newline.  This is
 branch-free and identical for every block, so one jitted program serves all.
 
-Two device entry points share that algebra:
+One per-byte core, :func:`_parse_block_bytes`, carries that algebra in
+*sorted-segment* form: token/line ids increase with byte position, so
+every per-token and per-line quantity is a cumulative max/sum plus a
+gather instead of a scatter — on CPU XLA a scatter runs ~5M elem/s
+while cumsum/gather run 20-100M elem/s.  Two entry points wrap it:
 
 * :func:`parse_block` / :func:`parse_blocks` — block in, fixed-capacity
-  per-block ``(src, dst, w, count)`` out.  The standalone parser: unit
-  tests, the Pallas kernel's XLA reference, and the historical batch
-  pipeline all consume it.
+  per-block ``(src, dst, w, count)`` out (one compaction scatter per
+  block).  The standalone parser: unit tests, the Pallas kernel's XLA
+  reference, and the historical batch pipeline all consume it.
 * :func:`parse_accumulate` — the streaming loader's fused hot path: a
-  whole batch of blocks in, edges scattered **directly into the packed
+  whole batch of blocks in, edges packed **directly into the packed
   device accumulators** (donated, so the update is in-place where the
   backend supports buffer donation — see :func:`donation_supported`).
   The per-block ``(nb, edge_cap)`` intermediates of the two-step
-  parse-then-accumulate pipeline never materialize, and the per-token /
-  per-line scatters of :func:`parse_block` are replaced with sorted-
-  segment algebra (cumulative max/sum + gathers) — on CPU XLA a scatter
-  runs ~5M elem/s while cumsum/gather run 20-100M elem/s, which is
-  where the streaming engine's speedup over the batch round-trip lives.
+  parse-then-accumulate pipeline never materialize; the batch-wide
+  compaction (:func:`_compact_accumulate`) costs exactly one scatter
+  per batch, which is where the streaming engine's speedup over the
+  batch round-trip lives.  The Pallas engine shares the same
+  compaction through ``kernels.parse_edges.parse_edges_accumulate``.
 
 Limits (documented): vertex ids must have <= 9 decimal digits (int32 math;
 covers every graph in the paper, max |V| = 214M), weights are plain
@@ -68,12 +72,6 @@ def _scatter_set(cap: int, select, index, values, fill, dtype):
     return out.at[idx].set(values.astype(dtype), mode="drop")
 
 
-def _scatter_add(cap: int, select, index, values, dtype):
-    out = jnp.zeros((cap,), dtype)
-    idx = jnp.where(select, index, cap)
-    return out.at[idx].add(values.astype(dtype), mode="drop")
-
-
 @functools.partial(
     jax.jit,
     static_argnames=("weighted", "base", "edge_cap", "max_digits"),
@@ -93,103 +91,26 @@ def parse_block(
     buf:  (n,) uint8, newline-padded.  A line is *owned* iff the index of
     its terminating newline lies in [owned_start, owned_end).
     Returns int32 src/dst (padded with -1), float32 w or None, int32 count.
+
+    A thin wrapper over the per-byte sorted-segment core
+    (:func:`_parse_block_bytes`) plus one compaction scatter — lines
+    compact in terminating-newline order, which is line order.
     """
     n = buf.shape[0]
-    tok_cap = n // 2 + 2
-    line_cap = n + 1
-
-    d = buf.astype(I32)
-    idx = jnp.arange(n, dtype=I32)
-
-    is_digit = (d >= 48) & (d <= 57)
-    is_dot = d == _DOT
-    is_minus = d == _MINUS
-    is_tok = is_digit | is_dot | is_minus
-    is_nl = d == _NL
-    is_ws = (d == _SP) | (d == _TAB) | (d == _CR)
-    is_bad = ~(is_tok | is_nl | is_ws)
-
-    # ---- token segmentation -------------------------------------------------
-    prev_tok = jnp.concatenate([jnp.zeros((1,), bool), is_tok[:-1]])
-    tok_start = is_tok & ~prev_tok
-    tok_ord = jnp.cumsum(tok_start.astype(I32)) - 1      # token id at/under i
-    num_toks = jnp.maximum(tok_ord[-1] + 1, 0)
-
-    # line index of every byte = #newlines strictly before it
-    line_of = jnp.cumsum(is_nl.astype(I32)) - is_nl.astype(I32)
-
-    # per-token quantities (scatter at token starts / ends)
-    next_tok = jnp.concatenate([is_tok[1:], jnp.zeros((1,), bool)])
-    tok_end = is_tok & ~next_tok
-    tok_line = _scatter_set(tok_cap, tok_start, tok_ord,
-                            line_of, line_cap, I32)      # line of each token
-    cum_dig = jnp.cumsum(is_digit.astype(I32))           # inclusive global
-    dig_before_tok = _scatter_set(tok_cap, tok_start, tok_ord,
-                                  cum_dig - is_digit.astype(I32), 0, I32)
-
-    # digits strictly after i within the same token
-    tok_total_dig = _scatter_add(tok_cap, is_tok, tok_ord, is_digit, I32)
-    dig_incl = cum_dig - dig_before_tok[jnp.clip(tok_ord, 0, tok_cap - 1)]
-    digits_after = jnp.clip(tok_total_dig[jnp.clip(tok_ord, 0, tok_cap - 1)]
-                            - dig_incl, 0, max_digits)
-
-    # fractional digits: dot position per token
-    tok_dot_idx = _scatter_set(tok_cap, is_tok & is_dot, tok_ord, idx, -1, I32)
-    tok_has_dot = tok_dot_idx >= 0
-    dot_of = tok_dot_idx[jnp.clip(tok_ord, 0, tok_cap - 1)]
-    is_frac_digit = is_digit & (dot_of >= 0) & (idx > dot_of)
-    tok_frac_len = _scatter_add(tok_cap, is_tok, tok_ord, is_frac_digit, I32)
-    tok_neg = _scatter_add(tok_cap, is_tok, tok_ord, is_minus, I32) > 0
-
-    # integer value over *all* digits of the token ("3.25" -> 325), but the
-    # place of a digit counts only digit chars after it, so the dot is inert.
-    digit_val = jnp.where(is_digit, d - 48, 0)
-    pow10_i = (10 ** jnp.arange(max_digits + 1, dtype=I32))
-    contrib_i = digit_val * pow10_i[digits_after]
-    tok_int = _scatter_add(tok_cap, is_digit & is_tok, tok_ord, contrib_i, I32)
-
-    if weighted:
-        pow10_f = jnp.float32(10.0) ** jnp.arange(max_digits + 1)
-        contrib_f = digit_val.astype(jnp.float32) * pow10_f[digits_after]
-        tok_allf = _scatter_add(tok_cap, is_digit & is_tok, tok_ord, contrib_f,
-                                jnp.float32)
-        tok_float = tok_allf / pow10_f[jnp.clip(tok_frac_len, 0, max_digits)]
-        tok_float = jnp.where(tok_neg, -tok_float, tok_float)
-        del tok_has_dot
-
-    # ---- line assembly ------------------------------------------------------
-    t_arange = jnp.arange(tok_cap, dtype=I32)
-    tok_valid = t_arange < num_toks
-    tl = jnp.where(tok_valid, tok_line, line_cap)
-    first_tok_of_line = jnp.full((line_cap + 1,), tok_cap, I32) \
-        .at[jnp.where(tok_valid, tl, line_cap)].min(t_arange, mode="drop")[:-1]
-    ord_in_line = t_arange - first_tok_of_line[jnp.clip(tl, 0, line_cap - 1)]
-
-    ntok_line = _scatter_add(line_cap, tok_valid, tl, jnp.ones_like(t_arange), I32)
-    bad_line = _scatter_add(line_cap, is_bad, line_of,
-                            jnp.ones_like(idx), I32) > 0
-    term_idx = _scatter_set(line_cap, is_nl, line_of, idx, -1, I32)
-
-    def line_val(role, values, fill, dtype):
-        sel = tok_valid & (ord_in_line == role)
-        return _scatter_set(line_cap, sel, tl, values, fill, dtype)
-
-    src_l = line_val(0, tok_int, -1, I32)
-    dst_l = line_val(1, tok_int, -1, I32)
-    if weighted:
-        w_l = line_val(2, tok_float, 1.0, jnp.float32)   # missing weight -> 1
-        has_w = line_val(2, jnp.ones_like(t_arange), 0, I32) > 0
-        w_l = jnp.where(has_w, w_l, 1.0)
-
-    owned = (term_idx >= owned_start) & (term_idx < owned_end)
-    valid = owned & ~bad_line & (ntok_line >= 2)
-
-    # ---- compaction (GVEL over-allocation: fixed capacity + count) ----------
+    valid, src_b, dst_b, w_b = _parse_block_bytes(
+        buf, owned_start, owned_end, weighted=weighted, base=base,
+        max_digits=max_digits)
     pos = jnp.cumsum(valid.astype(I32)) - 1
     count = jnp.maximum(pos[-1] + 1, 0)
-    src = _scatter_set(edge_cap, valid, pos, src_l - base, -1, I32)
-    dst = _scatter_set(edge_cap, valid, pos, dst_l - base, -1, I32)
-    w = _scatter_set(edge_cap, valid, pos, w_l, 0.0, jnp.float32) if weighted else None
+    # the block's only scatter: pack the valid newline byte positions;
+    # values then come from gathers at those positions
+    packed = _scatter_set(edge_cap, valid, pos,
+                          jnp.arange(n, dtype=I32), n, I32)
+    pv = packed < n
+    pc = jnp.minimum(packed, n - 1)
+    src = jnp.where(pv, src_b[pc], -1)
+    dst = jnp.where(pv, dst_b[pc], -1)
+    w = jnp.where(pv, w_b[pc], 0.0) if weighted else None
     return src, dst, w, count
 
 
@@ -224,14 +145,14 @@ def _parse_block_bytes(buf, owned_start, owned_end, *, weighted: bool,
     ``valid[i]`` is True iff byte ``i`` is an *owned* newline terminating
     a well-formed edge line; ``src``/``dst``/``w`` carry that line's
     parsed values at those bytes (garbage elsewhere — consumers gather
-    at valid positions only).  Same grammar and ownership semantics as
-    :func:`parse_block`, but expressed entirely in sorted-segment
-    algebra: token/line ids increase with byte position, so every
-    per-token and per-line quantity is a cumulative max/sum plus a
-    gather instead of a scatter.  Integer token values come from a
-    wrapped int32 cumulative sum — per-token differences are exact for
-    <= ``max_digits`` digit tokens, so src/dst match :func:`parse_block`
-    bit-for-bit (weights: see the module docstring).
+    at valid positions only).  Token/line ids increase with byte
+    position, so every per-token and per-line quantity is a cumulative
+    max/sum plus a gather — no scatters at all.  Integer token values
+    come from a wrapped int32 cumulative sum — per-token differences
+    are exact for <= ``max_digits`` digit tokens.  The Pallas kernel
+    (``kernels.parse_edges``) realizes this same algebra in VMEM; both
+    wrappers (:func:`parse_block`, :func:`parse_accumulate`) and the
+    kernel therefore agree bit-for-bit.
     """
     n = buf.shape[0]
     d = buf.astype(I32)
@@ -308,18 +229,20 @@ def _parse_block_bytes(buf, owned_start, owned_end, *, weighted: bool,
     return valid, src, dst, w
 
 
-def _parse_accumulate_impl(acc_src, acc_dst, acc_w, total, bufs,
-                           owned_start, owned_end, *, weighted: bool,
-                           base: int, edge_bound: int, max_digits: int = 9):
-    nb, blen = bufs.shape
-    fn = functools.partial(_parse_block_bytes, weighted=weighted, base=base,
-                           max_digits=max_digits)
-    valid, src, dst, w = jax.vmap(fn)(bufs, owned_start, owned_end)
+def _compact_accumulate(acc_src, acc_dst, acc_w, total, valid, src, dst, w,
+                        *, edge_bound: int):
+    """Pack a batch of per-byte parses into the accumulators at ``total``.
+
+    ``valid``/``src``/``dst``/``w`` are ``(nb, blen)`` byte-domain
+    outputs of :func:`_parse_block_bytes` (or the Pallas kernel's
+    byte-domain realization of it — ``kernels.parse_edges`` fuses the
+    same compaction after its kernel).  Blocks pack consecutively and
+    edges within a block stay in line order — the same edge order the
+    two-step parse_blocks + accumulate pipeline produced.
+    """
     valid_f = valid.reshape(-1)
-    flat_n = nb * blen
-    # batch-wide exclusive compaction: blocks pack consecutively, edges
-    # within a block stay in line order — the same edge order the
-    # two-step parse_blocks + accumulate pipeline produced
+    flat_n = valid_f.shape[0]
+    # batch-wide exclusive compaction
     dest = jnp.cumsum(valid_f.astype(I32)) - 1
     count = jnp.maximum(dest[-1] + 1, 0)
     # one scatter packs byte positions; values then come from gathers
@@ -342,6 +265,16 @@ def _parse_accumulate_impl(acc_src, acc_dst, acc_w, total, bufs,
         w_w = jnp.where(pv, w.reshape(-1)[posc], 0.0)
         acc_w = jax.lax.dynamic_update_slice(acc_w, w_w, (total,))
     return acc_src, acc_dst, acc_w, total + count
+
+
+def _parse_accumulate_impl(acc_src, acc_dst, acc_w, total, bufs,
+                           owned_start, owned_end, *, weighted: bool,
+                           base: int, edge_bound: int, max_digits: int = 9):
+    fn = functools.partial(_parse_block_bytes, weighted=weighted, base=base,
+                           max_digits=max_digits)
+    valid, src, dst, w = jax.vmap(fn)(bufs, owned_start, owned_end)
+    return _compact_accumulate(acc_src, acc_dst, acc_w, total, valid, src,
+                               dst, w, edge_bound=edge_bound)
 
 
 @functools.lru_cache(maxsize=None)

@@ -50,6 +50,7 @@ from __future__ import annotations
 import os
 import struct
 import threading
+from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -69,6 +70,16 @@ SECTION_LEN = struct.calcsize(SECTION_FMT)     # 24
 SECTION_FMT_V2 = "<IIQQIIQ"
 SECTION_LEN_V2 = struct.calcsize(SECTION_FMT_V2)   # 40
 ALIGN = 4096                       # sections are page-aligned
+
+# Per-section budget for decoded-frame memos on the selective-read path
+# (get_slice).  A long-lived handle serving point reads against a large
+# compressed section would otherwise accumulate every frame it ever
+# touched — the decoded payload re-assembled piecemeal, pinned by the
+# serving cache.  Least-recently-used frames are dropped past the cap
+# (re-decode on next touch); evictions are counted and surfaced through
+# Snapshot.frame_cache_stats() / SourceCache.stats().  Tests (and
+# memory-constrained servers) may lower this module global.
+FRAME_CACHE_BYTES = 32 * 1024 * 1024
 
 FLAG_WEIGHTED = 1 << 0
 FLAG_EDGELIST = 1 << 1
@@ -359,7 +370,8 @@ class _Section:
 
     __slots__ = ("path", "sid", "dtype", "offset", "nbytes", "codec",
                  "raw_nbytes", "_data", "_arr", "_lock", "_ftable",
-                 "_frames")
+                 "_frames", "_frames_bytes", "_frame_hits",
+                 "_frame_evictions")
 
     def __init__(self, path, sid, dtype, offset, nbytes, codec,
                  raw_nbytes, data):
@@ -375,7 +387,11 @@ class _Section:
                      if codec is None else None)
         self._lock = threading.Lock()
         self._ftable = None              # codecs.FrameEntry seek index
-        self._frames: Dict[int, np.ndarray] = {}   # frame idx -> raw bytes
+        # frame idx -> raw bytes, LRU order, bounded by FRAME_CACHE_BYTES
+        self._frames: "OrderedDict[int, np.ndarray]" = OrderedDict()
+        self._frames_bytes = 0
+        self._frame_hits = 0
+        self._frame_evictions = 0
 
     @property
     def length(self) -> int:
@@ -403,6 +419,7 @@ class _Section:
                     raise SnapshotError(str(exc)) from None
                 arr.flags.writeable = False  # parity with the mmap views
                 self._frames.clear()         # full decode supersedes frames
+                self._frames_bytes = 0
                 self._arr = arr.view(self.dtype)
         return self._arr
 
@@ -465,6 +482,19 @@ class _Section:
                     except ValueError as exc:
                         raise SnapshotError(str(exc)) from None
                     self._frames[entry.index] = raw
+                    self._frames_bytes += raw.nbytes
+                    # LRU bound: drop coldest memos past the byte cap.
+                    # ``parts`` still references this read's frames, so
+                    # eviction only forgets, never corrupts, the slice
+                    # being assembled.
+                    cap = max(int(FRAME_CACHE_BYTES), 0)
+                    while self._frames_bytes > cap and len(self._frames) > 1:
+                        _, old = self._frames.popitem(last=False)
+                        self._frames_bytes -= old.nbytes
+                        self._frame_evictions += 1
+                else:
+                    self._frame_hits += 1
+                    self._frames.move_to_end(entry.index)
                 parts.append(raw)
             base = touched[0].raw_off
             buf = parts[0] if len(parts) == 1 else np.concatenate(parts)
@@ -572,6 +602,21 @@ class Snapshot:
         """Distinct codec names used by compressed sections."""
         return sorted({c.codec.name for c in self._sections.values()
                        if c.codec is not None})
+
+    def frame_cache_stats(self) -> Dict[str, int]:
+        """Decoded-frame memo counters summed over sections:
+        ``frames`` / ``bytes`` currently held (bounded per section by
+        ``FRAME_CACHE_BYTES``), ``hits`` (reads served from a memo) and
+        ``evictions`` (memos dropped past the cap) since open.  The
+        serving cache (:meth:`repro.core.cache.SourceCache.stats`)
+        aggregates this across its hot handles."""
+        out = {"frames": 0, "bytes": 0, "hits": 0, "evictions": 0}
+        for c in self._sections.values():
+            out["frames"] += len(c._frames)
+            out["bytes"] += c._frames_bytes
+            out["hits"] += c._frame_hits
+            out["evictions"] += c._frame_evictions
+        return out
 
     def materialize(self) -> "Snapshot":
         """Force-decode (and checksum) every section; returns self.

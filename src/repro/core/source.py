@@ -343,12 +343,20 @@ class GraphSource:
             self._el_engine = opts.engine
         return self._el
 
-    def csr(self, *, method: str = "staged", rho: int = 4,
-            rows=None) -> CSR:
+    def _build_method(self, method: Optional[str]) -> str:
+        """Per-call ``method`` wins; else the handle's
+        ``LoadOptions.method``; else ``staged``."""
+        return method or self.options.method or "staged"
+
+    def csr(self, *, method: Optional[str] = None, rho: int = 4,
+            bin_bits: Optional[int] = None, rows=None) -> CSR:
         """The graph as a :class:`CSR`; computed on first call per
-        ``(method, rho)``, memoized on the handle.  A ``.gvel``
-        snapshot with an embedded CSR serves it straight from mmap
-        (``method``/``rho`` do not apply — the stored CSR wins).
+        ``(method, rho, bin_bits)``, memoized on the handle.
+        ``method=None`` resolves to the handle's ``LoadOptions.method``
+        (``open_graph(..., method="binned")``), then ``staged``.  A
+        ``.gvel`` snapshot with an embedded CSR serves it straight from
+        mmap (``method``/``rho``/``bin_bits`` do not apply — the stored
+        CSR wins).
 
         ``rows`` selects a vertex-range slice: a ``range`` with step 1
         (or a ``(lo, hi)`` pair), returning a row-local CSR —
@@ -362,19 +370,25 @@ class GraphSource:
         slicing the full — memoized — CSR, so the result is identical
         either way.  Row slices are not memoized (the full product is;
         slices are cheap and unbounded in number)."""
+        method = self._build_method(method)
+        if bin_bits is None:
+            bin_bits = self.options.bin_bits
         if rows is not None:
-            return self._csr_rows(rows, method=method, rho=rho)
-        key = (method, rho)
+            return self._csr_rows(rows, method=method, rho=rho,
+                                  bin_bits=bin_bits)
+        key = (method, rho, bin_bits)
         if key not in self._csrs:
             if self.format == FORMAT_MTX:
                 from .csr import convert_to_csr
                 opts = self._opts_for("csr")
                 csr = convert_to_csr(self.edgelist(), method=method, rho=rho,
+                                     bin_bits=bin_bits,
                                      engine=csr_convert_engine(opts.engine))
             else:
                 opts = self._opts_for("csr")
                 csr = read_csr_via(
                     self.path, opts, method=method, rho=rho,
+                    bin_bits=bin_bits,
                     fallback_edgelist=lambda: self._edgelist_for(opts))
             self._csrs[key] = csr
         return self._csrs[key]
@@ -405,12 +419,22 @@ class GraphSource:
             return None
         return snap
 
-    def _csr_rows(self, rows, *, method: str, rho: int) -> CSR:
+    def frame_cache_stats(self) -> Optional[dict]:
+        """Decoded-frame memo counters of the pinned lazy snapshot
+        handle (:meth:`repro.core.snapshot.Snapshot.frame_cache_stats`),
+        or ``None`` when no snapshot is pinned — non-``.gvel`` sources,
+        or a selective path never touched."""
+        snap = self._snap
+        return None if snap is None else snap.frame_cache_stats()
+
+    def _csr_rows(self, rows, *, method: str, rho: int,
+                  bin_bits: Optional[int] = None) -> CSR:
         lo, hi = _normalize_rows(rows)
         snap = self._selective_snap()
         if snap is not None:
             return snap.csr_rows(lo, hi, weighted=self._weighted())
-        return slice_csr(self.csr(method=method, rho=rho), lo, hi)
+        return slice_csr(self.csr(method=method, rho=rho, bin_bits=bin_bits),
+                         lo, hi)
 
     def neighbors(self, u: int, *, with_weights: bool = False):
         """Point lookup: vertex ``u``'s neighbor ids as a 1-D int32
@@ -452,10 +476,12 @@ class GraphSource:
                              f"[0, {full.num_rows})")
         return int(full.offsets[u + 1]) - int(full.offsets[u])
 
-    def csr_sharded(self, mesh, *, axis: str = "data", rho: int = 4) -> CSR:
+    def csr_sharded(self, mesh, *, axis: str = "data", rho: int = 4,
+                    method: Optional[str] = None,
+                    bin_bits: Optional[int] = None) -> CSR:
         """The graph as a :class:`CSR` sharded row-wise across ``mesh``
-        along ``axis``; computed on first call per ``(mesh, axis,
-        rho)``, memoized on the handle.
+        along ``axis``; computed on first call per ``(mesh, axis, rho,
+        method, bin_bits)``, memoized on the handle.
 
         Each mesh shard streams only its byte-range span of the file
         through the fused parse pipeline (:func:`repro.core.blocks.
@@ -480,11 +506,14 @@ class GraphSource:
                 f"byte-range sharded streaming applies to text "
                 f"edgelists; use .csr() and shard the result, or keep "
                 f"the original text file for sharded loads")
-        key = (mesh, axis, int(rho))
+        method = self._build_method(method)
+        if bin_bits is None:
+            bin_bits = self.options.bin_bits
+        key = (mesh, axis, int(rho), method, bin_bits)
         if key not in self._sharded_csrs:
             self._sharded_csrs[key] = read_csr_sharded_via(
                 self.path, self._opts_for("csr"), mesh=mesh, axis=axis,
-                rho=rho)
+                rho=rho, method=method, bin_bits=bin_bits)
         return self._sharded_csrs[key]
 
     def _edgelist_for(self, opts: LoadOptions) -> EdgeList:
@@ -543,7 +572,7 @@ class GraphSource:
 
     def save(self, out_path: str, *, compress: Optional[str] = None,
              compress_level: Optional[int] = None, csr: bool = True,
-             method: str = "staged", rho: int = 4) -> "GraphSource":
+             method: Optional[str] = None, rho: int = 4) -> "GraphSource":
         """Write this graph as a ``.gvel`` snapshot and return a handle
         on the output — the symmetric write path ("write once, load
         many").  ``compress`` accepts a codec spec (``"zlib"``,
@@ -551,6 +580,7 @@ class GraphSource:
         Products are reused: a memoized edgelist/CSR is not recomputed.
         """
         from .snapshot import SnapshotError, save_snapshot
+        method = self._build_method(method)
         if compress is not None:
             from .codecs import parse_codec_spec
             codec, level = parse_codec_spec(compress)
@@ -594,6 +624,8 @@ def open_graph(
     symmetric: bool = False,
     num_vertices: Optional[int] = None,
     tune: bool = False,
+    method: Optional[str] = None,
+    bin_bits: Optional[int] = None,
     **engine_kw,
 ) -> GraphSource:
     """Open a graph file as a lazy :class:`GraphSource` handle.
@@ -613,11 +645,16 @@ def open_graph(
     ``batch_blocks``, ``num_workers``, ...).  ``tune=True`` fills
     un-pinned streaming block geometry from the measured per-host
     profile (:mod:`repro.core.tune`; first use on a host runs the
-    sweep and caches it — see docs/performance.md).
+    sweep and caches it — see docs/performance.md).  ``method``
+    (``"global"``/``"staged"``/``"binned"``) pins the CSR build
+    strategy for every ``.csr()``-family product off the handle, and
+    ``bin_bits`` sets the binned build's vertex-range width; a per-call
+    ``csr(method=...)`` still wins.
     """
     opts = LoadOptions(engine=engine, weighted=weighted, symmetric=symmetric,
                        base=1 if base is None else base,
                        num_vertices=num_vertices, offset=offset, tune=tune,
+                       method=method, bin_bits=bin_bits,
                        engine_kw=dict(engine_kw))
     return GraphSource(path, opts, validate=validate)
 

@@ -28,7 +28,6 @@ from __future__ import annotations
 
 import json
 import os
-import platform
 import time
 from typing import Dict, Iterable, List, Optional
 
@@ -42,10 +41,12 @@ _ENV_CACHE = "REPRO_TUNE_CACHE"
 
 
 def host_key() -> str:
-    """Profile key: geometry is a property of this machine + backend."""
-    import jax
-    return "-".join([platform.system().lower(), platform.machine(),
-                     f"cpu{os.cpu_count()}", jax.default_backend()])
+    """Profile key: geometry is a property of this machine + the
+    resolved platform configuration (:func:`repro.core.env.fingerprint`
+    — backend, forced device count and float width all move the knee,
+    so each gets its own profile)."""
+    from .env import fingerprint
+    return fingerprint()
 
 
 def cache_path() -> str:

@@ -1,4 +1,4 @@
-from .ops import parse_edges
+from .ops import parse_edges, parse_edges_accumulate
 from .ref import parse_edges_ref
 
-__all__ = ["parse_edges", "parse_edges_ref"]
+__all__ = ["parse_edges", "parse_edges_accumulate", "parse_edges_ref"]

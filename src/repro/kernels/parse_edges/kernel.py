@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: parse one edgelist text block -> packed edges.
+"""Pallas TPU kernel: edgelist text block -> per-byte parsed edges.
 
 The TPU realization of GVEL Algorithm 1's hot loop.  Each grid step DMAs
 one `buf_len`-byte block (GVEL's beta=256 KiB fits VMEM with large
@@ -7,17 +7,24 @@ i32 state per input byte, so beta<=1 MiB tiles are safe) and runs the
 mask/scan parse entirely in VMEM:
 
   byte classes -> token segmentation (cumsum) -> digit place values
-  (segment algebra) -> per-line slots -> compaction scatter.
+  (sorted-segment algebra: cumulative max/min/sum + gathers) -> per-line
+  values pinned at terminating newlines.
+
+The kernel emits the **byte domain**: ``valid[i]`` marks owned newlines
+terminating well-formed edge lines, with that line's (src, dst, w) at
+those bytes — the same contract as ``core.parse._parse_block_bytes``,
+whose algebra this body mirrors operation for operation.  Compaction is
+deliberately *outside* the kernel: the fused loader path packs a whole
+batch with one scatter (``core.parse._compact_accumulate``) straight
+into the donated accumulators, and the standalone ``parse_edges`` entry
+compacts per block.  Keeping the kernel scatter-free means every op in
+the body is VPU-native (compare/select/scan along the minor axis) — no
+Mosaic dynamic-scatter support needed.
 
 `weighted` is a *Python-level* specialization parameter — the paper found
 (§4.1.6) that making the weighted flag a template parameter keeps the hot
 loop small enough to stay in the instruction cache; here each value of
 the flag produces a distinct, smaller Mosaic program, the same insight.
-
-TPU lowering note: the compaction step uses dynamic scatter within VMEM
-(`.at[].set`), which requires Mosaic's dynamic-indexing support; the
-kernel is validated in interpret mode against ref.py and designed so all
-other ops are VPU-native (compare/select/cumsum along the minor axis).
 """
 from __future__ import annotations
 
@@ -30,13 +37,9 @@ from jax.experimental import pallas as pl
 I32 = jnp.int32
 
 
-def _parse_block_body(owned_ref, buf_ref, src_ref, dst_ref, w_ref, cnt_ref,
+def _parse_bytes_body(owned_ref, buf_ref, valid_ref, src_ref, dst_ref, w_ref,
                       *, weighted: bool, base: int, max_digits: int):
     n = buf_ref.shape[-1]
-    edge_cap = src_ref.shape[-1]
-    line_cap = n + 1
-    tok_cap = n // 2 + 2
-
     d = buf_ref[0, :].astype(I32)
     idx = jax.lax.iota(I32, n)
     owned_start = owned_ref[0]
@@ -52,83 +55,131 @@ def _parse_block_body(owned_ref, buf_ref, src_ref, dst_ref, w_ref, cnt_ref,
 
     prev_tok = jnp.concatenate([jnp.zeros((1,), bool), is_tok[:-1]])
     tok_start = is_tok & ~prev_tok
-    tok_ord = jnp.cumsum(tok_start.astype(I32)) - 1
-    num_toks = jnp.maximum(tok_ord[-1] + 1, 0)
-    line_of = jnp.cumsum(is_nl.astype(I32)) - is_nl.astype(I32)
+    next_tok = jnp.concatenate([is_tok[1:], jnp.zeros((1,), bool)])
+    tok_end = is_tok & ~next_tok
 
-    def sset(cap, select, index, values, fill, dtype):
-        out = jnp.full((cap,), fill, dtype)
-        return out.at[jnp.where(select, index, cap)].set(
-            values.astype(dtype), mode="drop")
+    cum_ts = jnp.cumsum(tok_start.astype(I32))     # token starts <= i
+    cum_dig = jnp.cumsum(is_digit.astype(I32))     # digits <= i
 
-    def sadd(cap, select, index, values, dtype):
-        out = jnp.zeros((cap,), dtype)
-        return out.at[jnp.where(select, index, cap)].add(
-            values.astype(dtype), mode="drop")
+    # my token's end/start byte position, per byte (valid at token bytes:
+    # tokens never span newlines, so runs are well-nested)
+    end_pos = jax.lax.cummin(jnp.where(tok_end, idx, n - 1), reverse=True)
+    start_pos = jax.lax.cummax(jnp.where(tok_start, idx, 0))
 
-    cum_dig = jnp.cumsum(is_digit.astype(I32))
-    dig_before = sset(tok_cap, tok_start, tok_ord,
-                      cum_dig - is_digit.astype(I32), 0, I32)
-    tok_total_dig = sadd(tok_cap, is_tok, tok_ord, is_digit, I32)
-    safe_ord = jnp.clip(tok_ord, 0, tok_cap - 1)
-    dig_incl = cum_dig - dig_before[safe_ord]
-    digits_after = jnp.clip(tok_total_dig[safe_ord] - dig_incl, 0, max_digits)
+    # digits strictly after byte i within its token
+    digits_after = jnp.clip(cum_dig[end_pos] - cum_dig, 0, max_digits)
+    pow10_i = 10 ** jax.lax.iota(I32, max_digits + 1)
+    contrib = jnp.where(is_digit, (d - 48) * pow10_i[digits_after], 0)
+    csum_c = jnp.cumsum(contrib)       # int32 wraps; per-token diff is exact
+    excl_c = csum_c - contrib
+    # integer value of the token ending at byte i (valid at token ends)
+    tok_val = csum_c - excl_c[start_pos]
 
-    digit_val = jnp.where(is_digit, d - 48, 0)
-    pow10 = 10 ** jax.lax.iota(I32, max_digits + 1)
-    contrib = digit_val * pow10[digits_after]
-    tok_int = sadd(tok_cap, is_digit, tok_ord, contrib, I32)
+    # latest newline strictly before byte i (-1: none)
+    pex = jnp.concatenate([
+        jnp.full((1,), -1, I32),
+        jax.lax.cummax(jnp.where(is_nl, idx, -1))[:-1]])
+    # token starts up to my line's opening newline
+    cts_at = jnp.where(pex < 0, 0, cum_ts[jnp.maximum(pex, 0)])
+    # my token's 0-based ordinal within its line (valid at token ends)
+    ord_in_line = cum_ts - 1 - cts_at
+
+    def role_pos(k):
+        """Latest byte <= i ending a token with line-ordinal k."""
+        return jax.lax.cummax(jnp.where(tok_end & (ord_in_line == k), idx, -1))
+
+    p0, p1 = role_pos(0), role_pos(1)
+    bad_pos = jax.lax.cummax(jnp.where(is_bad, idx, -1))
+
+    owned = (idx >= owned_start) & (idx < owned_end)
+    # ">= 2 tokens in the line" <=> a role-1 token ends inside it
+    valid = is_nl & owned & (p1 > pex) & ~(bad_pos > pex)
+
+    valid_ref[0, :] = valid.astype(I32)
+    src_ref[0, :] = tok_val[jnp.maximum(p0, 0)] - base
+    dst_ref[0, :] = tok_val[jnp.maximum(p1, 0)] - base
 
     if weighted:
-        tok_dot = sset(tok_cap, is_dot, tok_ord, idx, -1, I32)
-        dot_of = tok_dot[safe_ord]
-        is_frac = is_digit & (dot_of >= 0) & (idx > dot_of)
-        tok_frac = sadd(tok_cap, is_tok, tok_ord, is_frac, I32)
-        tok_neg = sadd(tok_cap, is_tok, tok_ord, is_minus, I32) > 0
-        pow10f = jnp.float32(10.0) ** jax.lax.iota(jnp.float32, max_digits + 1)
-        contrib_f = digit_val.astype(jnp.float32) * pow10f[digits_after]
-        tok_allf = sadd(tok_cap, is_digit, tok_ord, contrib_f, jnp.float32)
-        tok_float = tok_allf / pow10f[jnp.clip(tok_frac, 0, max_digits)]
-        tok_float = jnp.where(tok_neg, -tok_float, tok_float)
-
-    tok_line = sset(tok_cap, tok_start, tok_ord, line_of, line_cap, I32)
-    t_ar = jax.lax.iota(I32, tok_cap)
-    tok_valid = t_ar < num_toks
-    tl = jnp.where(tok_valid, tok_line, line_cap)
-    first_tok = jnp.full((line_cap + 1,), tok_cap, I32).at[
-        jnp.where(tok_valid, tl, line_cap)].min(t_ar, mode="drop")[:-1]
-    ord_in_line = t_ar - first_tok[jnp.clip(tl, 0, line_cap - 1)]
-
-    ntok = sadd(line_cap, tok_valid, tl, jnp.ones_like(t_ar), I32)
-    bad_line = sadd(line_cap, is_bad, line_of, jnp.ones_like(idx), I32) > 0
-    term = sset(line_cap, is_nl, line_of, idx, -1, I32)
-
-    def line_val(role, vals, fill, dtype):
-        sel = tok_valid & (ord_in_line == role)
-        return sset(line_cap, sel, tl, vals, fill, dtype)
-
-    src_l = line_val(0, tok_int, -1, I32)
-    dst_l = line_val(1, tok_int, -1, I32)
-    if weighted:
-        w_l = line_val(2, tok_float, 1.0, jnp.float32)
-        has_w = line_val(2, jnp.ones_like(t_ar), 0, I32) > 0
-        w_l = jnp.where(has_w, w_l, 1.0)
-
-    owned = (term >= owned_start) & (term < owned_end)
-    valid = owned & ~bad_line & (ntok >= 2)
-    pos = jnp.cumsum(valid.astype(I32)) - 1
-    cnt = jnp.maximum(pos[-1] + 1, 0)
-
-    src_ref[0, :] = sset(edge_cap, valid, pos, src_l - base, -1, I32)
-    dst_ref[0, :] = sset(edge_cap, valid, pos, dst_l - base, -1, I32)
-    if weighted:
-        w_ref[0, :] = sset(edge_cap, valid, pos, w_l, 0.0, jnp.float32)
-    cnt_ref[0, 0] = cnt
+        p2 = role_pos(2)
+        dot_pos = jax.lax.cummax(jnp.where(is_dot, idx, -1))
+        minus_pos = jax.lax.cummax(jnp.where(is_minus, idx, -1))
+        p2c = jnp.maximum(p2, 0)
+        w_start = start_pos[p2c]
+        dot_of = dot_pos[p2c]
+        frac_len = jnp.where(dot_of >= w_start,
+                             cum_dig[p2c] - cum_dig[jnp.maximum(dot_of, 0)], 0)
+        pow10_f = jnp.float32(10.0) ** jax.lax.iota(jnp.float32,
+                                                    max_digits + 1)
+        wf = tok_val[p2c].astype(jnp.float32) \
+            / pow10_f[jnp.clip(frac_len, 0, max_digits)]
+        wf = jnp.where(minus_pos[p2c] >= w_start, -wf, wf)
+        w_ref[0, :] = jnp.where(p2 > pex, wf, 1.0)   # missing weight -> 1
+    else:
+        w_ref[0, :] = jnp.ones((n,), jnp.float32)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("weighted", "base", "edge_cap", "max_digits", "interpret"),
+    static_argnames=("weighted", "base", "max_digits", "interpret"),
+)
+def parse_bytes_kernel(
+    bufs: jax.Array,          # (nb, buf_len) uint8
+    owned: jax.Array,         # (2,) int32 — [owned_start, owned_end)
+    *,
+    weighted: bool,
+    base: int,
+    max_digits: int = 9,
+    interpret: bool = True,
+):
+    """Per-byte parse of a batch of blocks: ``(valid, src, dst, w)``,
+    each ``(nb, buf_len)`` (``w`` is None when unweighted).  The
+    byte-domain contract of ``core.parse._parse_block_bytes``."""
+    nb, buf_len = bufs.shape
+    body = functools.partial(_parse_bytes_body, weighted=weighted, base=base,
+                             max_digits=max_digits)
+    out_shapes = (
+        jax.ShapeDtypeStruct((nb, buf_len), I32),           # valid mask
+        jax.ShapeDtypeStruct((nb, buf_len), I32),           # src
+        jax.ShapeDtypeStruct((nb, buf_len), I32),           # dst
+        jax.ShapeDtypeStruct((nb, buf_len), jnp.float32),   # w
+    )
+    spec = pl.BlockSpec((1, buf_len), lambda i: (i, 0))
+    valid, src, dst, w = pl.pallas_call(
+        body,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),   # owned range (scalar-ish)
+            spec,
+        ],
+        out_specs=(spec, spec, spec, spec),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(owned, bufs)
+    return valid != 0, src, dst, (w if weighted else None)
+
+
+def _compact_block(valid, src_b, dst_b, w_b, *, edge_cap: int,
+                   weighted: bool):
+    """One block's byte-domain parse -> fixed-capacity (src, dst, w, cnt);
+    the single compaction scatter of ``core.parse.parse_block``."""
+    n = valid.shape[0]
+    pos = jnp.cumsum(valid.astype(I32)) - 1
+    cnt = jnp.maximum(pos[-1] + 1, 0)
+    packed = jnp.full((edge_cap,), n, I32).at[
+        jnp.where(valid, pos, edge_cap)].set(
+            jnp.arange(n, dtype=I32), mode="drop")
+    pv = packed < n
+    pc = jnp.minimum(packed, n - 1)
+    src = jnp.where(pv, src_b[pc], -1)
+    dst = jnp.where(pv, dst_b[pc], -1)
+    w = jnp.where(pv, w_b[pc], 0.0) if weighted else None
+    return src, dst, w, cnt
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("weighted", "base", "edge_cap", "max_digits",
+                     "interpret"),
 )
 def parse_edges_kernel(
     bufs: jax.Array,          # (nb, buf_len) uint8
@@ -140,30 +191,16 @@ def parse_edges_kernel(
     max_digits: int = 9,
     interpret: bool = True,
 ):
-    nb, buf_len = bufs.shape
-    body = functools.partial(_parse_block_body, weighted=weighted, base=base,
-                             max_digits=max_digits)
-    out_shapes = (
-        jax.ShapeDtypeStruct((nb, edge_cap), I32),       # src
-        jax.ShapeDtypeStruct((nb, edge_cap), I32),       # dst
-        jax.ShapeDtypeStruct((nb, edge_cap), jnp.float32),  # w (zeros if unweighted)
-        jax.ShapeDtypeStruct((nb, 1), I32),              # count
-    )
-    grid = (nb,)
-    src, dst, w, cnt = pl.pallas_call(
-        body,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((2,), lambda i: (0,)),          # owned range (scalar-ish)
-            pl.BlockSpec((1, buf_len), lambda i: (i, 0)),
-        ],
-        out_specs=(
-            pl.BlockSpec((1, edge_cap), lambda i: (i, 0)),
-            pl.BlockSpec((1, edge_cap), lambda i: (i, 0)),
-            pl.BlockSpec((1, edge_cap), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
-        ),
-        out_shape=out_shapes,
-        interpret=interpret,
-    )(owned, bufs)
-    return src, dst, (w if weighted else None), cnt[:, 0]
+    """Kernel parse + per-block compaction: (src, dst, w, counts), each
+    row a fixed-capacity block parse (the historical packed contract)."""
+    valid, src, dst, w = parse_bytes_kernel(
+        bufs, owned, weighted=weighted, base=base, max_digits=max_digits,
+        interpret=interpret)
+    fn = functools.partial(_compact_block, edge_cap=edge_cap,
+                           weighted=weighted)
+    if weighted:
+        src_o, dst_o, w_o, cnt = jax.vmap(fn)(valid, src, dst, w)
+    else:
+        src_o, dst_o, w_o, cnt = jax.vmap(
+            lambda v, s, d: fn(v, s, d, None))(valid, src, dst)
+    return src_o, dst_o, w_o, cnt

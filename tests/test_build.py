@@ -98,3 +98,109 @@ def test_convert_to_csr_engines_match():
     ra, rb = _rows(a.offsets, a.targets, v), _rows(b.offsets, b.targets, v)
     for u in range(v):
         assert np.array_equal(ra[u], rb[u])
+
+
+# ---- binned (propagation-blocking) build -------------------------------------
+#
+# csr_binned realizes the *stable* (src, original index) rank, so its
+# offsets AND targets must match the stable-sort oracle bit for bit —
+# not just per-row as multisets.
+
+def _weights_for(src, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.random(len(src)).astype(np.float32)
+
+
+@pytest.mark.parametrize("weighted", [False, True])
+@pytest.mark.parametrize("bin_bits", [None, 1, 3, 64])
+def test_binned_bitwise_matches_oracle(weighted, bin_bits):
+    v, e = 64, 1000
+    src, dst = _random_edges(v, e, seed=11, pad=24)
+    w = _weights_for(src, seed=11) if weighted else None
+    ref = build.csr_np(src, dst, w, v)
+    o, t, ww = build.csr_binned(
+        jnp.asarray(src), jnp.asarray(dst),
+        None if w is None else jnp.asarray(w), v,
+        bin_bits=bin_bits, weighted=weighted)
+    assert int(o[-1]) == 1000            # padding sank below every edge
+    assert np.array_equal(np.asarray(o, np.int64), np.asarray(ref.offsets))
+    assert np.array_equal(np.asarray(t)[:1000], np.asarray(ref.targets))
+    if weighted:
+        assert np.array_equal(np.asarray(ww)[:1000], np.asarray(ref.weights))
+
+
+@pytest.mark.parametrize("case", ["empty", "skew", "v1", "tiny"])
+def test_binned_edge_shapes(case):
+    if case == "empty":
+        v, src, dst = 8, np.empty(0, np.int32), np.empty(0, np.int32)
+    elif case == "skew":                 # every edge on one vertex
+        v = 32
+        src = np.full(257, 7, np.int32)
+        dst = np.arange(257, dtype=np.int32) % v
+    elif case == "v1":
+        v = 1
+        src = np.zeros(9, np.int32)
+        dst = np.zeros(9, np.int32)
+    else:                                # single edge
+        v, src, dst = 4, np.asarray([2], np.int32), np.asarray([1], np.int32)
+    ref = build.csr_np(src, dst, None, v)
+    o, t, _ = build.csr_binned(jnp.asarray(src), jnp.asarray(dst), None, v)
+    assert np.array_equal(np.asarray(o, np.int64), np.asarray(ref.offsets))
+    assert np.array_equal(np.asarray(t)[:len(ref.targets)],
+                          np.asarray(ref.targets))
+
+
+@pytest.mark.parametrize("weighted", [False, True])
+@pytest.mark.parametrize("num_workers", [1, 4])
+@pytest.mark.parametrize("bin_bits", [None, 2])
+def test_binned_np_matches_oracle(weighted, num_workers, bin_bits):
+    v, e = 100, 3000                     # v not a power of two: ragged last bin
+    src, dst = _random_edges(v, e, seed=13, pad=32)
+    w = _weights_for(src, seed=13) if weighted else None
+    ref = build.csr_np(src, dst, w, v)
+    got = build.csr_binned_np(src, dst, w, v, bin_bits=bin_bits,
+                              num_workers=num_workers)
+    assert np.array_equal(got.offsets, ref.offsets)
+    assert np.array_equal(got.targets, ref.targets)
+    if weighted:
+        assert np.array_equal(got.weights, ref.weights)
+
+
+def test_binned_respects_base_through_convert():
+    v, e = 48, 400
+    src, dst = _random_edges(v, e, seed=5)
+    el = EdgeList(src, dst, None, np.int64(e), v)
+    a = convert_to_csr(el, method="binned")
+    b = convert_to_csr(el, method="binned", engine="numpy")
+    ref = convert_to_csr(el, engine="numpy")
+    for got in (a, b):
+        assert np.array_equal(np.asarray(got.offsets, np.int64),
+                              np.asarray(ref.offsets))
+        assert np.array_equal(np.asarray(got.targets), np.asarray(ref.targets))
+
+
+# ---- int32 offsets contract --------------------------------------------------
+#
+# Device builds accumulate offsets as int32 (jnp.cumsum(deg, int32)): at
+# E >= 2**31 the cumsum would wrap silently.  The guard must refuse
+# loudly at trace time.  Exercised with a mocked limit — the check reads
+# the module global, so a 2B-edge graph is not needed.
+
+def test_offsets_width_guard_mocked_limit(monkeypatch):
+    monkeypatch.setattr(build, "INT32_OFFSETS_LIMIT", 100)
+    v = 16
+    src, dst = _random_edges(v, 129, seed=2)
+    js, jd = jnp.asarray(src), jnp.asarray(dst)
+    for fn in (lambda: build.csr_binned(js, jd, None, v),
+               lambda: build.csr_staged(js, jd, None, v, rho=4),
+               lambda: build.csr_global(js, jd, None, v)):
+        with pytest.raises(ValueError, match="exceeds int32 offsets"):
+            fn()
+
+
+def test_offsets_width_guard_under_limit_ok(monkeypatch):
+    monkeypatch.setattr(build, "INT32_OFFSETS_LIMIT", 150)
+    v = 16
+    src, dst = _random_edges(v, 130, seed=2)
+    o, t, _ = build.csr_binned(jnp.asarray(src), jnp.asarray(dst), None, v)
+    assert int(o[-1]) == 130

@@ -96,6 +96,50 @@ def test_failed_open_not_cached(tmp_path):
     assert c.get(gv) is c.get(gv)         # recovered, and cached
 
 
+def test_failed_open_releases_waiters(tmp_path):
+    """Single-flight with a failing opener: the pending event must be
+    set on *every* exit from the opener, so a waiter parked on the slot
+    retries (and succeeds) instead of blocking forever."""
+    gv, _, _ = _snapshot(tmp_path, "g")
+    entered = threading.Event()
+    gate = threading.Event()
+    calls = []
+
+    def flaky(path, **kw):
+        calls.append(1)
+        if len(calls) == 1:               # first opener fails...
+            entered.set()
+            gate.wait(5)                  # ...only after the waiter parks
+            raise RuntimeError("boom")
+        return open_graph(path, **kw)     # retries succeed
+
+    c = SourceCache(capacity=2, open_fn=flaky)
+    results = {}
+
+    def opener():
+        try:
+            results["opener"] = c.get(gv)
+        except RuntimeError as exc:
+            results["opener"] = exc
+
+    def waiter():
+        entered.wait(5)
+        results["waiter"] = c.get(gv)
+
+    t1 = threading.Thread(target=opener)
+    t2 = threading.Thread(target=waiter)
+    t1.start(), t2.start()
+    entered.wait(5)
+    t2.join(0.3)                          # park the waiter on the slot
+    gate.set()                            # now let the opener raise
+    t1.join(5), t2.join(5)
+    assert not t2.is_alive(), "waiter blocked forever on a failed open"
+    assert isinstance(results["opener"], RuntimeError)
+    # the waiter retried: it either re-opened itself or found the entry
+    assert results["waiter"].neighbors(5) is not None
+    assert len(calls) >= 2
+
+
 # ---- invalidation on snapshot swap -------------------------------------------
 
 def test_swap_invalidates_on_next_request(tmp_path):

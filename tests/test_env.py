@@ -1,0 +1,55 @@
+"""Platform-config layer: XLA flag merging, device-count clamping, and
+the fingerprint that keys measured tune profiles."""
+import re
+import warnings
+
+import pytest
+
+from repro.core import env, tune
+
+
+def test_set_xla_flag_merges_not_clobbers(monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS", "--user_flag=keep --bare")
+    env.set_xla_flag("--ours", "1")
+    flags = env.get_xla_flags()
+    assert flags["--user_flag"] == "keep"
+    assert flags["--bare"] is None
+    assert flags["--ours"] == "1"
+    # replacing an existing flag touches only that flag
+    env.set_xla_flag("--ours", "2")
+    flags = env.get_xla_flags()
+    assert flags["--ours"] == "2" and flags["--user_flag"] == "keep"
+
+
+def test_forced_host_devices_roundtrip(monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS", "")
+    assert env.forced_host_devices() is None
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")      # backend is already up in tests
+        env.set_host_devices(1)
+    assert env.forced_host_devices() == 1
+
+
+def test_set_host_devices_clamps_to_cores(monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS", "")
+    monkeypatch.setattr(env.os, "cpu_count", lambda: 2)
+    with pytest.warns(RuntimeWarning, match="2 CPUs available"):
+        env.set_host_devices(64)
+    assert env.forced_host_devices() == 2
+
+
+def test_late_platform_change_warns(monkeypatch):
+    if not env._jax_initialized():
+        pytest.skip("backend not initialized yet in this process")
+    with pytest.warns(RuntimeWarning, match="after the JAX backend"):
+        env.set_platform("cpu")
+
+
+def test_fingerprint_shape_and_tune_key():
+    fp = env.fingerprint()
+    assert re.fullmatch(r"[a-z]+-\w+-cpu\d+-\w+-d\d+-x(32|64)", fp)
+    prof = env.platform_profile()
+    assert f"cpu{prof['cpu_count']}" in fp
+    assert prof["backend"] in fp
+    # the autotuner keys its profiles by exactly this fingerprint
+    assert tune.host_key() == fp

@@ -1,0 +1,99 @@
+"""Bounded decoded-frame cache on the selective-read path.
+
+A serving handle (``GraphSource`` pinned hot by ``SourceCache``) decodes
+compressed ``.gvel`` sections frame by frame for point reads and memoizes
+the decoded frames.  The memo must be a *bounded* LRU
+(``snapshot.FRAME_CACHE_BYTES``): a point-read hammer across a large
+section must stay under the byte cap (evicting cold frames) while every
+answer stays correct, and the hot-graph cache must surface the pinned
+bytes / evictions in its ``stats()``.
+"""
+import numpy as np
+
+from repro.core import load_edgelist, open_graph, save_snapshot, snapshot
+from repro.core.build import csr_np
+from repro.core.cache import SourceCache
+from repro.core.csr import convert_to_csr
+from repro.core.generate import write_edgelist
+
+FRAME_BETA = 96
+
+
+def _snapshot(tmp_path, name, *, seed=0, v=60, e=400):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, v, e).astype(np.int32)
+    dst = rng.integers(0, v, e).astype(np.int32)
+    el_path = str(tmp_path / f"{name}.el")
+    write_edgelist(el_path, src, dst, None, base=1)
+    el = load_edgelist(el_path, engine="numpy", num_vertices=v)
+    gv = str(tmp_path / f"{name}.gvel")
+    save_snapshot(gv, edgelist=el, csr=convert_to_csr(el, engine="numpy"),
+                  compress="zlib", frame_beta=FRAME_BETA)
+    return gv, v, csr_np(src, dst, None, v)
+
+
+def _hammer(source, v, oracle, rounds=3):
+    off = np.asarray(oracle.offsets)
+    tgt = np.asarray(oracle.targets)
+    for _ in range(rounds):
+        for u in range(v):
+            got = source.neighbors(u)
+            assert np.array_equal(got, tgt[off[u]:off[u + 1]]), u
+
+
+def test_point_read_hammer_stays_under_cap(tmp_path, monkeypatch):
+    cap = 4 * FRAME_BETA                 # room for ~4 decoded frames/section
+    monkeypatch.setattr(snapshot, "FRAME_CACHE_BYTES", cap)
+    gv, v, oracle = _snapshot(tmp_path, "hammer", e=1500)
+    src = open_graph(gv)
+    _hammer(src, v, oracle)
+    stats = src.frame_cache_stats()
+    # csr_indices alone spans ~60 frames; unbounded memoization would
+    # hold them all.  Bound is per section; offsets + indices touched.
+    assert stats["bytes"] <= 2 * cap
+    assert stats["evictions"] > 0        # the hammer cycled the cache
+    assert stats["hits"] > 0             # but locality still paid
+    assert stats["frames"] * FRAME_BETA <= 2 * cap + 2 * FRAME_BETA
+
+
+def test_unbounded_before_cap_is_reachable(tmp_path, monkeypatch):
+    """With a roomy cap the whole touched span stays memoized (no
+    evictions) — the bound only bites when memory pressure is real."""
+    monkeypatch.setattr(snapshot, "FRAME_CACHE_BYTES", 32 << 20)
+    gv, v, oracle = _snapshot(tmp_path, "roomy", e=1500)
+    src = open_graph(gv)
+    _hammer(src, v, oracle, rounds=2)
+    stats = src.frame_cache_stats()
+    assert stats["evictions"] == 0
+    assert stats["bytes"] > 0
+
+
+def test_full_decode_drops_frame_memos(tmp_path):
+    gv, v, oracle = _snapshot(tmp_path, "full")
+    src = open_graph(gv)
+    src.neighbors(3)                     # seeds some frame memos
+    snap = src._selective_snap()
+    assert snap.frame_cache_stats()["bytes"] > 0
+    csr = snap.csr()                     # full decode supersedes the memos
+    assert np.array_equal(np.asarray(csr.offsets, np.int64),
+                          np.asarray(oracle.offsets))
+    assert snap.frame_cache_stats()["bytes"] == 0
+    assert src.frame_cache_stats()["frames"] == 0
+
+
+def test_source_cache_surfaces_frame_stats(tmp_path, monkeypatch):
+    cap = 4 * FRAME_BETA
+    monkeypatch.setattr(snapshot, "FRAME_CACHE_BYTES", cap)
+    gv, v, oracle = _snapshot(tmp_path, "served", e=1500)
+    c = SourceCache(capacity=4)
+    for u in range(v):
+        c.query(gv, "neighbors", vertex=u)
+    fc = c.stats()["frame_cache"]
+    assert fc["bytes"] > 0 and fc["bytes"] <= 2 * cap
+    assert fc["evictions"] > 0
+    # non-snapshot sources contribute nothing (and don't break stats)
+    el = str(tmp_path / "plain.el")
+    write_edgelist(el, np.asarray([1, 2], np.int32),
+                   np.asarray([2, 3], np.int32), None, base=1)
+    c.query(el, "degree", vertex=0)
+    assert c.stats()["frame_cache"]["bytes"] <= 2 * cap

@@ -124,6 +124,22 @@ def test_fused_engine_bitwise_equals_unfused(tmp_path, codec, weighted, base):
         assert got.weights is None and ref.weights is None
 
 
+@pytest.mark.parametrize("weighted,base", [(False, 1), (True, 0)])
+def test_pallas_engine_bitwise_equals_device(tmp_path, weighted, base):
+    """Both streaming engines run the same fused-donated accumulate off
+    the same per-byte algebra; their CSR outputs must be identical."""
+    path, v, e, _ = _graph(tmp_path, weighted=weighted, base=base, seed=21,
+                           e=900)
+    dev = load_csr(path, engine="device", weighted=weighted, base=base,
+                   num_vertices=v, beta=2048, batch_blocks=2)
+    pal = load_csr(path, engine="pallas", weighted=weighted, base=base,
+                   num_vertices=v, beta=2048, batch_blocks=2)
+    assert np.array_equal(dev.offsets, pal.offsets)
+    assert np.array_equal(dev.targets, pal.targets)
+    if weighted:
+        assert np.array_equal(dev.weights, pal.weights)
+
+
 @pytest.mark.parametrize("beta,bb", [(1024, 2), (2048, 3), (4096, 8),
                                      (16384, 2)])
 def test_multi_batch_grid_matches_oracle(tmp_path, beta, bb):
