@@ -20,27 +20,26 @@ import jax
 
 
 def graph_walk_source(path: str, cfg, batch: int, seq: int, *,
-                      engine: str = "device",
+                      engine: str = "device", seed: int = 99,
                       **load_kw) -> Callable[[int], dict]:
-    """Load a graph through ``open_graph(path).csr()`` and return a
-    deterministic step-indexed source of random-walk LM batches.
+    """Load a graph through ``open_graph(path)`` and return a
+    deterministic step-indexed source of random-walk LM batches
+    (a :class:`repro.data.corpus.WalkCorpus` bound to the handle).
 
     The returned callable feeds :class:`Prefetcher` directly, completing
     the streamed path: file -> packed device edges -> CSR -> walk batches,
     with the loader and the batch pipeline double-buffering at both ends.
     """
     from ..core.source import open_graph
-    from .walks import walk_batch
+    from .corpus import CorpusConfig, WalkCorpus
 
     method = load_kw.pop("method", "staged")
     rho = load_kw.pop("rho", 4)
-    csr = open_graph(path, engine=engine, **load_kw).csr(method=method,
-                                                         rho=rho)
-
-    def source(step: int) -> dict:
-        return walk_batch(csr, cfg, batch, seq, step)
-
-    return source
+    src = open_graph(path, engine=engine, **load_kw)
+    corpus = WalkCorpus(src, CorpusConfig(
+        batch=batch, seq=seq, vocab_size=cfg.vocab_size, seed=seed,
+        method=method, rho=rho))
+    return corpus.batch_at
 
 
 class Prefetcher:

@@ -3,8 +3,23 @@
 The end-to-end integration of the paper's technique with the training
 substrate: text edgelist --GVEL--> CSR --vectorized walker--> token
 batches.  Each walk step is two gathers (offsets, then a uniformly
-sampled neighbor); dead ends teleport.  Vertex ids map to tokens modulo
-the model vocab.  Pure function of (csr, step) — deterministic restart.
+sampled neighbor); dead ends (out-degree 0) self-loop, so a walk never
+steps outside its current vertex's adjacency.  Vertex ids map to tokens
+modulo the model vocab.
+
+Determinism contract (tests/test_walks.py):
+
+* Every walk is keyed **per walk id**, not per batch shape: walk ``i``
+  derives its stream from ``fold_in(key, walk_offset + i)``.  The same
+  ``key`` therefore yields bitwise-identical walks across repeated
+  calls *and* across batch splits —
+  ``random_walks(key, num_walks=8)`` equals the concatenation of
+  ``num_walks=4, walk_offset=0`` and ``num_walks=4, walk_offset=4``.
+  (This is what lets the serving runtime degrade batch size under
+  straggler pressure without perturbing the surviving walks.)
+* Pure function of ``(csr, key/step)`` — deterministic restart; the
+  walk corpus (:mod:`repro.data.corpus`) builds its step-indexed
+  resume contract on this.
 """
 from __future__ import annotations
 
@@ -16,36 +31,75 @@ import numpy as np
 
 I32 = jnp.int32
 
+# fold_in tag for the start-vertex draw; step draws use tags [0, length),
+# so any walk length below 2**31 - 1 cannot collide with it
+_START_TAG = 0x7FFFFFFF
 
-@functools.partial(jax.jit, static_argnames=("num_walks", "length", "num_vertices"))
-def random_walks(offsets, targets, key, *, num_walks: int, length: int,
-                 num_vertices: int):
-    """-> (num_walks, length) int32 vertex sequences."""
-    k0, key = jax.random.split(key)
-    cur = jax.random.randint(k0, (num_walks,), 0, num_vertices, I32)
 
-    def step(carry, k):
-        cur = carry
+def walk_keys(key, ids):
+    """Per-walk base keys: ``fold_in(key, id)`` for each walk id."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.asarray(ids, I32))
+
+
+@functools.partial(jax.jit, static_argnames=("length",))
+def walk_from(offsets, targets, keys, starts, *, length: int):
+    """Walks of ``length`` vertices from explicit ``starts``.
+
+    ``keys`` are per-walk base keys (:func:`walk_keys`); ``starts`` is a
+    matching ``(n,)`` int32 vector.  Returns ``(n, length)`` int32
+    sequences whose first column is ``starts``.  Each step samples a
+    neighbor uniformly from the current vertex's adjacency; a dead end
+    (out-degree 0) self-loops.
+    """
+    starts = jnp.asarray(starts, I32)
+
+    def step(cur, s):
         lo = offsets[cur]
         deg = offsets[cur + 1] - lo
-        kk, kt = jax.random.split(k)
-        r = jax.random.randint(kk, (num_walks,), 0, jnp.maximum(deg, 1), I32)
-        nxt = targets[jnp.clip(lo + r, 0, targets.shape[0] - 1)]
-        tele = jax.random.randint(kt, (num_walks,), 0, num_vertices, I32)
-        nxt = jnp.where(deg > 0, nxt, tele)
+        ks = jax.vmap(lambda k: jax.random.fold_in(k, s))(keys)
+        r = jax.vmap(
+            lambda k, d: jax.random.randint(k, (), 0, jnp.maximum(d, 1), I32)
+        )(ks, deg)
+        if targets.shape[0]:
+            nxt = targets[jnp.clip(lo + r, 0, targets.shape[0] - 1)]
+            nxt = jnp.where(deg > 0, nxt, cur)
+        else:                       # edgeless graph: every vertex self-loops
+            nxt = cur
         return nxt, cur
 
-    keys = jax.random.split(key, length)
-    _, seq = jax.lax.scan(step, cur, keys)
-    return seq.T                                   # (num_walks, length)
+    _, seq = jax.lax.scan(step, starts, jnp.arange(length, dtype=I32))
+    return seq.T                                   # (n, length)
 
 
-def walk_batch(csr, cfg, batch: int, seq: int, step: int):
+@functools.partial(jax.jit, static_argnames=("num_walks", "length"))
+def random_walks(offsets, targets, key, *, num_walks: int, length: int,
+                 num_vertices, walk_offset=0):
+    """-> (num_walks, length) int32 vertex sequences with random starts.
+
+    Walk ``i`` is a pure function of ``fold_in(key, walk_offset + i)``
+    and the CSR — see the batch-split invariance note in the module
+    docstring.  ``num_vertices`` and ``walk_offset`` trace (a serving
+    runtime cycling graphs and request ids never recompiles; only new
+    batch geometry does).
+    """
+    ids = jnp.asarray(walk_offset, I32) + jnp.arange(num_walks, dtype=I32)
+    keys = walk_keys(key, ids)
+    starts = jax.vmap(
+        lambda k: jax.random.randint(
+            jax.random.fold_in(k, _START_TAG), (), 0, num_vertices, I32)
+    )(keys)
+    return walk_from(offsets, targets, keys, starts, length=length)
+
+
+def walk_batch(csr, cfg, batch: int, seq: int, step: int, *, seed: int = 99,
+               walk_offset: int = 0):
     """Training batch from walks: tokens = vertex ids mod vocab."""
     offsets = jnp.asarray(np.asarray(csr.offsets), I32)
     targets = jnp.asarray(np.asarray(csr.targets), I32)
-    key = jax.random.fold_in(jax.random.key(99), step)
+    key = jax.random.fold_in(jax.random.key(seed), step)
     walks = random_walks(offsets, targets, key, num_walks=batch,
-                         length=seq + 1, num_vertices=csr.num_vertices)
+                         length=seq + 1, num_vertices=csr.num_vertices,
+                         walk_offset=walk_offset)
     toks = (walks % cfg.vocab_size).astype(I32)
     return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

@@ -10,13 +10,22 @@ tests can inject failures deterministically.
   * straggler detection: a step slower than `straggler_factor` x the
     trailing-median is flagged; policy "warn" logs, "rebatch" re-issues
     the step with the same data (idempotent because the step index did
-    not advance),
+    not advance), "degrade" tells the driver to shrink its batch /
+    admission width instead of stalling (the serving runtime halves
+    engine occupancy; per-walk corpus keying keeps the surviving rows
+    bitwise identical — see repro.serve.runtime),
   * preemption: SIGTERM/SIGUSR1 set a flag; the loop checkpoints and
     exits cleanly at the next step boundary,
   * failure injection: `inject_failure(step)` raises inside the loop to
     exercise restart-from-checkpoint in tests,
   * elastic restart: on resume the mesh may have a different device
     count — restore goes through checkpoint.reshard.
+
+Signal handlers are installed only with ``handle_signals=True``, and
+the previously-installed handlers are saved and put back by
+:meth:`Coordinator.close` (the class is a context manager), so stacked
+or sequential coordinators never clobber each other's — or the host
+application's — handlers.
 """
 from __future__ import annotations
 
@@ -24,7 +33,9 @@ import dataclasses
 import signal
 import statistics
 import time
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
+
+_POLICIES = ("warn", "rebatch", "degrade")
 
 
 @dataclasses.dataclass
@@ -33,24 +44,43 @@ class FTConfig:
     keep: int = 3
     straggler_factor: float = 3.0
     straggler_window: int = 20
-    straggler_policy: str = "warn"      # warn | rebatch
+    straggler_policy: str = "warn"      # warn | rebatch | degrade
     handle_signals: bool = False
 
 
 class Coordinator:
     def __init__(self, cfg: FTConfig):
+        if cfg.straggler_policy not in _POLICIES:
+            raise ValueError(
+                f"straggler_policy must be one of {_POLICIES}, "
+                f"got {cfg.straggler_policy!r}")
         self.cfg = cfg
         self.step_times: List[float] = []
         self.preempted = False
         self.events: List[str] = []
         self._fail_at: Optional[int] = None
+        self._prev_handlers: Dict[int, object] = {}
         if cfg.handle_signals:
-            signal.signal(signal.SIGTERM, self._on_signal)
-            signal.signal(signal.SIGUSR1, self._on_signal)
+            for sig in (signal.SIGTERM, signal.SIGUSR1):
+                self._prev_handlers[sig] = signal.signal(sig, self._on_signal)
 
     def _on_signal(self, signum, frame):
         self.preempted = True
         self.events.append(f"preempt signal {signum}")
+
+    def close(self) -> None:
+        """Restore the signal handlers this coordinator displaced.
+        Idempotent; a coordinator that installed none is a no-op."""
+        while self._prev_handlers:
+            sig, prev = self._prev_handlers.popitem()
+            signal.signal(sig, prev)
+
+    def __enter__(self) -> "Coordinator":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
     # ---- test hooks ----------------------------------------------------------
     def inject_failure(self, step: int):
@@ -65,7 +95,7 @@ class Coordinator:
     # ---- policies -------------------------------------------------------------
     def observe_step(self, seconds: float) -> str:
         """Record a step time; returns action: ok | straggler-warn |
-        straggler-rebatch."""
+        straggler-rebatch | straggler-degrade."""
         w = self.step_times[-self.cfg.straggler_window:]
         self.step_times.append(seconds)
         if len(w) >= 5:

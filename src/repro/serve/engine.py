@@ -5,6 +5,19 @@ queued requests claim it (their prompt is prefilled into the slot's cache
 rows).  Single-host simulation of the scheduler every real serving stack
 (vLLM/JetStream) runs; the jitted decode step is the same program the
 dry-run lowers at production shapes.
+
+Scheduling invariants (tests/test_serve.py):
+
+* queued requests are never dropped: a request stays in the queue until
+  a slot admits it, slots freed by completions this tick are refilled
+  in the same tick, and ``run()`` drains queue + slots to empty by
+  default (``max_ticks`` is an explicit safety bound, not a silent
+  drop point),
+* admission is FIFO: requests enter slots in submit order, so per-slot
+  completion order follows admission order,
+* ``max_active`` caps how many slots admit concurrently (<= ``batch``);
+  the serving runtime lowers it under straggler pressure to degrade
+  throughput instead of stalling, and restores it when pressure clears.
 """
 from __future__ import annotations
 
@@ -16,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.transformer import init_caches
-from .step import make_decode_step, make_prefill_step
+from .step import jit_decode_step
 
 
 @dataclasses.dataclass
@@ -26,6 +39,7 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    slot: Optional[int] = None    # slot that served it (set at admission)
 
 
 class ServeEngine:
@@ -34,21 +48,31 @@ class ServeEngine:
         self.params = params
         self.batch = batch
         self.max_seq = max_seq
+        self.max_active = batch       # admission width; degradable at runtime
         self.caches = init_caches(cfg, batch, max_seq)
-        self.decode = jax.jit(make_decode_step(cfg, max_seq))
+        self.decode = jit_decode_step(cfg, max_seq)   # shared across engines
         self.pos = np.zeros(batch, np.int32)
         self.tok = np.zeros(batch, np.int32)
         self.slots: List[Optional[Request]] = [None] * batch
         self.queue: List[Request] = []
+        self.completed: List[Request] = []
 
     def submit(self, req: Request):
         self.queue.append(req)
 
+    def _active(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
     def _admit(self):
+        active = self._active()
         for slot in range(self.batch):
+            if active >= self.max_active:
+                break
             if self.slots[slot] is None and self.queue:
                 req = self.queue.pop(0)
+                req.slot = slot
                 self.slots[slot] = req
+                active += 1
                 # prefill the prompt into this slot by stepping tokens
                 # (single-slot prefill keeps the engine simple; a prod
                 # deployment jits a batched prefill_step — see launch.serve)
@@ -67,7 +91,9 @@ class ServeEngine:
         return np.asarray(nxt)
 
     def step(self) -> int:
-        """One engine tick: admit, decode one token for all active slots."""
+        """One engine tick: admit, decode one token for all active
+        slots, refill slots freed by completions (so the queue drains
+        even when every slot turns over at a tick boundary)."""
         self._admit()
         active = [s for s in range(self.batch) if self.slots[s] is not None]
         if not active:
@@ -82,12 +108,23 @@ class ServeEngine:
             self.tok[s] = int(nxt[s])
             if len(req.out) >= req.max_new or self.pos[s] >= self.max_seq - 1:
                 req.done = True
+                self.completed.append(req)
                 self.slots[s] = None
+        if self.queue:
+            self._admit()             # same-tick refill of freed slots
         return len(active)
 
-    def run(self, max_ticks: int = 1000) -> int:
+    def run(self, max_ticks: Optional[int] = None) -> int:
+        """Tick until queue and slots are empty.  ``max_ticks`` bounds
+        the loop for tests/timeouts; hitting it raises so a stalled
+        scheduler can never silently drop still-queued requests."""
         ticks = 0
-        while (self.queue or any(self.slots)) and ticks < max_ticks:
+        while self.queue or any(r is not None for r in self.slots):
+            if max_ticks is not None and ticks >= max_ticks:
+                pending = len(self.queue) + self._active()
+                raise RuntimeError(
+                    f"ServeEngine.run: {pending} requests still pending "
+                    f"after max_ticks={max_ticks}")
             self.step()
             ticks += 1
         return ticks

@@ -1,0 +1,240 @@
+"""Graph-walk serving runtime: snapshot corpus -> continuous batching
+under churn.
+
+The layer that turns the fast loader into a servable system (ROADMAP
+end-to-end scenario; docs/serving.md).  A :class:`ServeRuntime` owns
+
+* a :class:`~repro.core.cache.SourceCache` — every request resolves its
+  graph through an mtime/size-validated handle, so a snapshot swapped
+  on disk under the live server is picked up on the **next request**
+  with no restart and no dropped in-flight work (in-flight prompts
+  were already derived from the old handle and finish normally),
+* a continuous-batching :class:`~repro.serve.engine.ServeEngine` —
+  walk-LM requests (prompt = a deterministic random walk from the
+  requested graph, tokens = vertex ids mod vocab) share decode ticks
+  across slots,
+* a :class:`~repro.ft.coordinator.Coordinator` — straggler ticks
+  *degrade* the engine's admission width (halve ``max_active``)
+  instead of stalling, and restore it once pressure clears; preemption
+  flags stop serving at a tick boundary,
+* a :class:`RuntimeStats` counters object — the subsystem's
+  observability surface, exported by :meth:`ServeRuntime.stats` and
+  printed by ``benchmarks/serve_walks.py``.
+
+Training-side churn rides the same pieces: :meth:`ServeRuntime.corpus`
+opens a step-indexed :class:`~repro.data.corpus.WalkCorpus` stream
+through the cache, and the corpus cursor + ``ft.coordinator`` give
+kill/restart a bitwise-identical resume (proven in tests/test_runtime.py
+and the verify.sh chaos lane).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..core.cache import SourceCache
+from ..data.corpus import CorpusConfig, WalkCorpus
+from ..data.walks import I32, random_walks, walk_from, walk_keys
+from ..ft.coordinator import Coordinator, FTConfig
+from .engine import Request, ServeEngine
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class RuntimeStats:
+    """Monotonic counters over the runtime's lifetime."""
+
+    requests: int = 0             # requests completed
+    tokens: int = 0               # new tokens decoded
+    ticks: int = 0                # engine ticks driven by drain()
+    active_ticks: int = 0         # sum of active slots over ticks
+    seconds: float = 0.0          # wall time inside drain()
+    degrades: int = 0             # straggler-driven admission cuts
+    restores: int = 0             # admission width restorations
+    resumes: int = 0              # corpus streams opened at step > 0
+
+    def occupancy(self, batch: int) -> float:
+        """Mean fraction of slots busy per tick (0 when never ticked)."""
+        return self.active_ticks / (self.ticks * batch) if self.ticks else 0.0
+
+    def tokens_per_s(self) -> float:
+        return self.tokens / self.seconds if self.seconds else 0.0
+
+
+class ServeRuntime:
+    """Continuous-batching walk-LM server over a snapshot corpus."""
+
+    def __init__(self, cfg, params, *, batch: int = 4, max_seq: int = 64,
+                 cache: Optional[SourceCache] = None,
+                 coordinator: Optional[Coordinator] = None,
+                 ft: Optional[FTConfig] = None,
+                 seed: int = 0, prompt_len: int = 8):
+        self.cfg = cfg
+        self.cache = cache if cache is not None else SourceCache()
+        self.engine = ServeEngine(cfg, params, batch=batch, max_seq=max_seq)
+        self.coord = coordinator or Coordinator(
+            ft or FTConfig(straggler_policy="degrade", straggler_factor=4.0,
+                           straggler_window=8))
+        self.seed = seed
+        self.prompt_len = prompt_len
+        self._stats = RuntimeStats()
+        self._rids = itertools.count()
+        self._completed_seen = 0
+        self._ok_streak = 0
+        # device-pinned CSR per live GraphSource handle: a swapped
+        # snapshot reopens as a NEW handle (new id), so stale graphs
+        # can never serve a post-swap request; entries are pruned once
+        # they outnumber the cache's open-handle bound.
+        self._graphs: Dict[int, tuple] = {}
+
+    # -- graph resolution ----------------------------------------------------
+
+    def _graph(self, path: str, **open_kw):
+        src = self.cache.get(path, **open_kw)
+        ent = self._graphs.get(id(src))
+        if ent is None or ent[0] is not src:
+            csr = src.csr()
+            ent = (src, jnp.asarray(np.asarray(csr.offsets), I32),
+                   jnp.asarray(np.asarray(csr.targets), I32),
+                   int(csr.num_vertices))
+            if len(self._graphs) >= 2 * self.cache.capacity:
+                self._graphs.clear()
+            self._graphs[id(src)] = ent
+        return ent
+
+    # -- requests ------------------------------------------------------------
+
+    def submit(self, path: str, *, start: Optional[int] = None,
+               prompt_len: Optional[int] = None, max_new: int = 8,
+               rid: Optional[int] = None, **open_kw) -> Request:
+        """Admit one walk-LM request against ``path``.  The prompt is a
+        deterministic random walk over the graph as it exists on disk
+        *now* (resolved through the cache, so a swapped snapshot serves
+        its new contents from this request on).  ``start`` pins the
+        walk's first vertex; default start and every neighbor draw are
+        pure functions of ``(seed, rid, graph)``."""
+        rid = next(self._rids) if rid is None else rid
+        n = self.prompt_len if prompt_len is None else int(prompt_len)
+        _, offsets, targets, v = self._graph(path, **open_kw)
+        key = jax.random.key(self.seed)
+        if start is None:
+            walk = random_walks(offsets, targets, key, num_walks=1,
+                                length=n, num_vertices=v, walk_offset=rid)
+        else:
+            walk = walk_from(offsets, targets, walk_keys(key, [rid]),
+                             [int(start)], length=n)
+        prompt = np.asarray(walk[0] % self.cfg.vocab_size, np.int32)
+        req = Request(rid, prompt, max_new)
+        self.engine.submit(req)
+        return req
+
+    # -- serving loop --------------------------------------------------------
+
+    def _observe(self, dt: float) -> None:
+        action = self.coord.observe_step(dt)
+        eng = self.engine
+        if action == "straggler-degrade":
+            self._ok_streak = 0
+            new = max(1, eng.max_active // 2)
+            if new < eng.max_active:
+                eng.max_active = new
+                self._stats.degrades += 1
+        elif action == "ok" and eng.max_active < eng.batch:
+            self._ok_streak += 1
+            if self._ok_streak >= self.coord.cfg.straggler_window:
+                eng.max_active = min(eng.batch, eng.max_active * 2)
+                self._stats.restores += 1
+                self._ok_streak = 0
+
+    def tick(self) -> int:
+        """One timed engine tick; feeds the straggler policy and the
+        counters.  Returns the number of active slots decoded."""
+        t0 = time.perf_counter()
+        n = self.engine.step()
+        dt = time.perf_counter() - t0
+        st = self._stats
+        st.ticks += 1
+        st.active_ticks += n
+        st.seconds += dt
+        for req in self.engine.completed[self._completed_seen:]:
+            st.requests += 1
+            st.tokens += len(req.out)
+        self._completed_seen = len(self.engine.completed)
+        self._observe(dt)
+        return n
+
+    def drain(self, max_ticks: Optional[int] = None) -> int:
+        """Tick until every submitted request completes (or the
+        coordinator flags preemption — in-flight work stays queued in
+        the engine and a fresh ``drain()`` finishes it).  Returns ticks
+        run."""
+        ticks = 0
+        eng = self.engine
+        while eng.queue or any(r is not None for r in eng.slots):
+            if self.coord.should_stop():
+                break
+            if max_ticks is not None and ticks >= max_ticks:
+                raise RuntimeError(
+                    f"ServeRuntime.drain: requests pending after "
+                    f"max_ticks={max_ticks}")
+            self.tick()
+            ticks += 1
+        return ticks
+
+    def serve(self, paths, *, max_new: int = 8, **submit_kw) -> List[Request]:
+        """Submit one request per path and drain: the benchmark's
+        sustained-traffic entry."""
+        reqs = [self.submit(p, max_new=max_new, **submit_kw) for p in paths]
+        self.drain()
+        return reqs
+
+    # -- training-side corpus ------------------------------------------------
+
+    def corpus(self, path: str, ccfg: CorpusConfig, *, start_step: int = 0,
+               sharding=None, **open_kw):
+        """A step-indexed walk-batch stream over ``path``, resolved
+        through the same mtime-validated cache as requests.  A
+        ``start_step > 0`` is a resume (counted in stats) and
+        continues the stream bitwise-identically."""
+        src = self.cache.get(path, **open_kw)
+        if start_step:
+            self._stats.resumes += 1
+        return WalkCorpus(src, ccfg).batches(start_step=start_step,
+                                             sharding=sharding)
+
+    # -- observability -------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        """The runtime's counters plus the cache's (hits/misses/
+        invalidations and the decoded-frame memo of the hot handles)."""
+        st = self._stats
+        cache = self.cache.stats()
+        return {
+            "requests": st.requests,
+            "tokens": st.tokens,
+            "tokens_per_s": round(st.tokens_per_s(), 3),
+            "ticks": st.ticks,
+            "occupancy": round(st.occupancy(self.engine.batch), 4),
+            "max_active": self.engine.max_active,
+            "degrades": st.degrades,
+            "restores": st.restores,
+            "resumes": st.resumes,
+            "seconds": round(st.seconds, 6),
+            "cache": cache,
+        }
+
+    def close(self) -> None:
+        self.coord.close()
+
+    def __enter__(self) -> "ServeRuntime":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False

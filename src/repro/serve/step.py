@@ -1,4 +1,12 @@
-"""Serving steps: prefill (prompt -> cache) and decode (one token)."""
+"""Serving steps: prefill (prompt -> cache) and decode (one token).
+
+``jit_decode_step``/``jit_prefill_step`` memoize the jitted program per
+``(cfg, max_seq, tp)`` — engines come and go (one per ServeRuntime, per
+test, per benchmark phase), and each fresh ``jax.jit(make_decode_step(...))``
+closure is a new cache key that recompiles an identical program.  The
+memo keys on the frozen ModelConfig, so every engine at the same shape
+shares one compiled step.
+"""
 from __future__ import annotations
 
 import functools
@@ -25,3 +33,13 @@ def make_decode_step(cfg, max_seq: int, *, tp: int = 1, greedy: bool = True):
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return nxt, logits, caches
     return decode_step
+
+
+@functools.lru_cache(maxsize=None)
+def jit_decode_step(cfg, max_seq: int, tp: int = 1, greedy: bool = True):
+    return jax.jit(make_decode_step(cfg, max_seq, tp=tp, greedy=greedy))
+
+
+@functools.lru_cache(maxsize=None)
+def jit_prefill_step(cfg, max_seq: int, tp: int = 1):
+    return jax.jit(make_prefill_step(cfg, max_seq, tp=tp))

@@ -30,6 +30,10 @@ def run(
     log_every: int = 10,
     log: Callable[[str], None] = print,
 ):
+    # a WalkCorpus (repro.data.corpus) is a batch source: its
+    # batch_at(step) is the pure step-indexed function this loop's
+    # deterministic-replay contract requires
+    batch_source = getattr(batch_source, "batch_at", batch_source)
     coord = coordinator or Coordinator(ft or FTConfig())
     start = int(state.step)
     history = []

@@ -28,15 +28,15 @@ def test_walks_follow_edges(csr):
     w = np.asarray(walks)
     offs = np.asarray(csr.offsets)
     tgts = np.asarray(csr.targets)
-    edges_ok = teleports = 0
+    edges_ok = self_loops = 0
     for row in w:
         for a, b in zip(row[:-1], row[1:]):
             nbrs = tgts[offs[a]:offs[a + 1]]
             if b in nbrs:
                 edges_ok += 1
-            else:
-                assert len(nbrs) == 0      # teleport only at dead ends
-                teleports += 1
+            else:                          # self-loop only at dead ends
+                assert len(nbrs) == 0 and b == a
+                self_loops += 1
     assert edges_ok > 0
 
 

@@ -91,3 +91,50 @@ def test_checkpoint_cadence():
     assert not c.should_checkpoint(0)
     assert c.should_checkpoint(4)
     assert not c.should_checkpoint(5)
+
+
+def test_signal_handlers_saved_and_restored():
+    """Regression: a second Coordinator used to clobber the first's
+    handler with no way back; close() now restores the displaced one."""
+    import signal
+
+    before = signal.getsignal(signal.SIGUSR1)
+    c1 = Coordinator(FTConfig(handle_signals=True))
+    assert signal.getsignal(signal.SIGUSR1) == c1._on_signal
+    c2 = Coordinator(FTConfig(handle_signals=True))
+    assert signal.getsignal(signal.SIGUSR1) == c2._on_signal
+    c2.close()                         # unwinds to c1's handler...
+    assert signal.getsignal(signal.SIGUSR1) == c1._on_signal
+    c1.close()                         # ...and back to the original
+    assert signal.getsignal(signal.SIGUSR1) == before
+    c1.close()                         # idempotent
+
+
+def test_coordinator_context_manager_and_signal_delivery():
+    import os
+    import signal
+
+    before = signal.getsignal(signal.SIGUSR1)
+    with Coordinator(FTConfig(handle_signals=True)) as c:
+        os.kill(os.getpid(), signal.SIGUSR1)
+        assert c.should_stop()
+        assert any("preempt" in e for e in c.events)
+    assert signal.getsignal(signal.SIGUSR1) == before
+
+
+def test_no_signal_coordinator_close_is_noop():
+    import signal
+
+    before = signal.getsignal(signal.SIGTERM)
+    Coordinator(FTConfig()).close()
+    assert signal.getsignal(signal.SIGTERM) == before
+
+
+def test_degrade_policy_and_validation():
+    c = Coordinator(FTConfig(straggler_factor=2.0, straggler_window=10,
+                             straggler_policy="degrade"))
+    for _ in range(8):
+        assert c.observe_step(0.1) == "ok"
+    assert c.observe_step(0.5) == "straggler-degrade"
+    with pytest.raises(ValueError, match="straggler_policy"):
+        Coordinator(FTConfig(straggler_policy="panic"))

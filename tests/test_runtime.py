@@ -1,0 +1,161 @@
+"""ServeRuntime churn contract: snapshot swap under the live server
+(zero dropped in-flight requests), straggler degrade instead of stall,
+preemption-safe drain, corpus resume, stats surface (docs/serving.md)."""
+import os
+import shutil
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import reduced_config
+from repro.core import make_graph_file
+from repro.core.cache import SourceCache
+from repro.core.source import open_graph
+from repro.data.corpus import CorpusConfig, WalkCorpus
+from repro.ft.coordinator import Coordinator, FTConfig
+from repro.models import init_params
+from repro.serve.runtime import ServeRuntime
+
+CFG = reduced_config("phi4-mini-3.8b")
+CC = CorpusConfig(batch=2, seq=8, vocab_size=CFG.vocab_size, seed=5)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.key(3), CFG)
+
+
+@pytest.fixture()
+def snaps(tmp_path):
+    """Two different graphs as snapshots; ``a`` is the served path."""
+    ela = str(tmp_path / "a.el")
+    va, _ = make_graph_file(ela, "rmat", scale=7, edge_factor=6, seed=2)
+    a = str(tmp_path / "live.gvel")
+    open_graph(ela, engine="numpy", num_vertices=va).save(a)
+    elb = str(tmp_path / "b.el")
+    vb, _ = make_graph_file(elb, "uniform", scale=6, edge_factor=4, seed=9)
+    b = str(tmp_path / "b.gvel")
+    open_graph(elb, engine="numpy", num_vertices=vb).save(b)
+    return a, b
+
+
+def _runtime(params, **kw):
+    kw.setdefault("batch", 2)
+    kw.setdefault("max_seq", 32)
+    kw.setdefault("prompt_len", 8)
+    kw.setdefault("cache", SourceCache(capacity=4))
+    return ServeRuntime(CFG, params, **kw)
+
+
+def test_serves_more_requests_than_slots(params, snaps):
+    a, _ = snaps
+    rt = _runtime(params)
+    reqs = [rt.submit(a, max_new=4) for _ in range(5)]
+    rt.drain()
+    assert all(r.done and len(r.out) == 4 for r in reqs)
+    st = rt.stats()
+    assert st["requests"] == 5 and st["tokens"] == 20
+    assert st["ticks"] > 0 and 0 < st["occupancy"] <= 1.0
+    assert st["cache"]["hits"] >= 4        # one open, handle reused
+
+
+def test_deterministic_across_runtimes(params, snaps):
+    a, _ = snaps
+    rt1 = _runtime(params)
+    rt2 = _runtime(params)
+    q1 = [rt1.submit(a, max_new=3, rid=i) for i in range(3)]
+    q2 = [rt2.submit(a, max_new=3, rid=i) for i in range(3)]
+    rt1.drain(), rt2.drain()
+    for x, y in zip(q1, q2):
+        assert np.array_equal(x.prompt, y.prompt)
+        assert x.out == y.out
+
+
+def test_snapshot_swap_under_live_runtime(params, snaps):
+    """The (b) churn criterion: swap the snapshot on disk while
+    requests are in flight — nothing is dropped, and the next request
+    resolves the new graph via mtime invalidation, no restart."""
+    a, b = snaps
+    rt = _runtime(params)
+    inflight = [rt.submit(a, max_new=4, rid=i) for i in range(5)]
+    for _ in range(2):                     # mid-serving, slots busy
+        rt.tick()
+    shutil.copyfile(b, a)                  # swap under the live server
+    post = rt.submit(a, max_new=4, rid=0)  # same rid, new graph bytes
+    rt.drain()
+    assert all(r.done and len(r.out) == 4 for r in inflight + [post])
+    assert rt.cache.stats()["invalidations"] >= 1
+    # the post-swap prompt equals a cold open of the swapped file...
+    want = _runtime(params).submit(a, max_new=1, rid=0)
+    assert np.array_equal(post.prompt, want.prompt)
+    # ...and reflects the new graph, not the old one
+    assert not np.array_equal(inflight[0].prompt, post.prompt)
+
+
+def test_straggler_degrades_admission_width(params):
+    rt = _runtime(params, ft=FTConfig(straggler_policy="degrade",
+                                      straggler_factor=4.0,
+                                      straggler_window=6))
+    for _ in range(6):
+        rt._observe(0.01)
+    assert rt.engine.max_active == 2
+    rt._observe(1.0)                       # straggler tick -> halve
+    assert rt.engine.max_active == 1
+    assert rt.stats()["degrades"] == 1
+    for _ in range(6):                     # pressure clears -> restore
+        rt._observe(0.01)
+    assert rt.engine.max_active == 2
+    assert rt.stats()["restores"] == 1
+
+
+def test_degraded_width_still_completes(params, snaps):
+    a, _ = snaps
+    # huge window: healthy ticks never restore the width mid-test
+    rt = _runtime(params, ft=FTConfig(straggler_policy="degrade",
+                                      straggler_window=10**6))
+    rt.engine.max_active = 1               # degraded: serialized slots
+    reqs = [rt.submit(a, max_new=3) for _ in range(4)]
+    rt.drain()
+    assert all(r.done and len(r.out) == 3 for r in reqs)
+    assert max(r.slot for r in reqs) == 0  # only slot 0 ever admitted
+
+
+def test_preemption_pauses_then_resumes_drain(params, snaps):
+    a, _ = snaps
+    rt = _runtime(params)
+    reqs = [rt.submit(a, max_new=6) for _ in range(4)]
+    rt.coord.preempted = True              # simulated SIGTERM
+    assert rt.drain() == 0                 # stops at the tick boundary
+    assert not all(r.done for r in reqs)   # work still queued, not lost
+    rt.coord.preempted = False
+    rt.drain()
+    assert all(r.done and len(r.out) == 6 for r in reqs)
+
+
+def test_corpus_through_cache_resumes(params, snaps):
+    a, _ = snaps
+    rt = _runtime(params)
+    ref = []
+    with rt.corpus(a, CC) as stream:
+        for _ in range(5):
+            ref.append(np.asarray(next(stream)[1]["tokens"]))
+    assert rt.stats()["resumes"] == 0
+    with rt.corpus(a, CC, start_step=2) as stream:
+        for want in range(2, 5):
+            step, batch = next(stream)
+            assert step == want
+            assert np.array_equal(np.asarray(batch["tokens"]), ref[step])
+    assert rt.stats()["resumes"] == 1
+    # the corpus resolved through the same cache the requests use
+    assert rt.cache.stats()["hits"] >= 1
+
+
+def test_close_restores_signal_handlers(params):
+    import signal
+    before = signal.getsignal(signal.SIGUSR1)
+    with ServeRuntime(CFG, params, batch=2, max_seq=16,
+                      cache=SourceCache(capacity=2),
+                      ft=FTConfig(handle_signals=True)) as rt:
+        assert signal.getsignal(signal.SIGUSR1) == rt.coord._on_signal
+    assert signal.getsignal(signal.SIGUSR1) == before

@@ -64,3 +64,64 @@ def test_engine_respects_max_seq(setup):
     eng.submit(req)
     eng.run()
     assert req.done and len(req.out) <= 13
+
+
+def test_queue_never_drops_fifo_per_slot(setup):
+    """Regression: many more requests than slots — every request is
+    admitted (none dropped at tick boundaries) and completion order per
+    slot is FIFO (admission follows submit order)."""
+    eng = ServeEngine(CFG, setup, batch=3, max_seq=64)
+    rng = np.random.default_rng(1)
+    reqs = [Request(i, rng.integers(0, CFG.vocab_size, 4).astype(np.int32),
+                    int(rng.integers(2, 6)))
+            for i in range(11)]            # 11 requests > 3 slots
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert not eng.queue and all(s is None for s in eng.slots)
+    assert all(r.done and len(r.out) == r.max_new for r in reqs)
+    assert sorted(r.rid for r in eng.completed) == list(range(11))
+    # per-slot completion order == per-slot admission (= submit) order
+    by_slot = {}
+    for r in eng.completed:
+        by_slot.setdefault(r.slot, []).append(r.rid)
+    for slot, rids in by_slot.items():
+        assert rids == sorted(rids), (slot, rids)
+
+
+def test_slot_freed_and_refilled_same_tick(setup):
+    """A slot that completes on tick t admits the next queued request
+    on tick t (continuous batching), not t+1."""
+    eng = ServeEngine(CFG, setup, batch=1, max_seq=32)
+    first = Request(0, np.asarray([1, 2], np.int32), 1)
+    second = Request(1, np.asarray([3, 4], np.int32), 1)
+    eng.submit(first)
+    eng.submit(second)
+    eng.step()                             # first completes this tick...
+    assert first.done
+    assert eng.slots[0] is second          # ...second already admitted
+    assert not eng.queue
+
+
+def test_max_active_caps_admission(setup):
+    eng = ServeEngine(CFG, setup, batch=4, max_seq=32)
+    eng.max_active = 2
+    reqs = [Request(i, np.asarray([1, 2], np.int32), 3) for i in range(6)]
+    for r in reqs:
+        eng.submit(r)
+    while eng.queue or any(s is not None for s in eng.slots):
+        eng.step()
+        assert sum(1 for s in eng.slots if s is not None) <= 2
+    assert all(r.done for r in reqs)
+    assert {r.slot for r in reqs} <= {0, 1}
+
+
+def test_run_max_ticks_raises_instead_of_dropping(setup):
+    eng = ServeEngine(CFG, setup, batch=1, max_seq=64)
+    for i in range(4):
+        eng.submit(Request(i, np.asarray([1, 2], np.int32), 8))
+    with pytest.raises(RuntimeError, match="pending"):
+        eng.run(max_ticks=2)
+    assert eng.queue or any(s is not None for s in eng.slots)  # kept, not lost
+    eng.run()                              # a fresh drain finishes them
+    assert len(eng.completed) == 4
