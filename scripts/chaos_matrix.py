@@ -1,0 +1,343 @@
+#!/usr/bin/env python
+"""Seeded chaos matrix: drive the fault-injection harness
+(repro.core.faults) through the recovery paths verify.sh must prove
+(docs/robustness.md) and fail loudly when any self-healing contract
+regresses.
+
+Scenarios (each seeded, each printing one OK line):
+
+  transient-retry   streaming + cached loads under injected transient
+                    OSErrors/latency retry to a bitwise-equal result
+  stuck-reader      a stalled block source raises StageTimeout within
+                    the (lowered) watchdog budget — never a hang
+  quarantine-swap   a CRC-corrupt CSR frame on disk quarantines
+                    (path, section) with structured CorruptGraphError
+                    while sibling sections + other graphs serve, and a
+                    swap on disk recovers
+  sigterm-resume    SIGTERM mid-corpus-stream -> cursor checkpoint ->
+                    restart stitches a bitwise-identical batch stream
+  shard-reexec      a shard whose in-span retries exhaust re-executes
+                    its byte span bitwise-equal to the fault-free load
+                    (needs >= 2 devices: run under JAX_PLATFORMS=cpu
+                    XLA_FLAGS=--xla_force_host_platform_device_count=4)
+
+Usage:
+  python scripts/chaos_matrix.py                  # all local scenarios
+  python scripts/chaos_matrix.py --scenario stuck-reader
+  python scripts/chaos_matrix.py --scenario shard-reexec   # device lane
+"""
+import argparse
+import hashlib
+import os
+import signal
+import struct
+import subprocess
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import faults, load_edgelist, make_graph_file, open_graph, \
+    save_snapshot  # noqa: E402
+from repro.core import snapshot as snapmod  # noqa: E402
+from repro.core.cache import SourceCache  # noqa: E402
+from repro.core.csr import convert_to_csr  # noqa: E402
+from repro.core.faults import (CorruptGraphError, FaultPlan, FaultSpec,
+                               StageTimeout, fault_plan)  # noqa: E402
+
+LOCAL_SCENARIOS = ("transient-retry", "stuck-reader", "quarantine-swap",
+                   "sigterm-resume")
+ALL_SCENARIOS = LOCAL_SCENARIOS + ("shard-reexec",)
+
+
+def _graph(tmp, name, seed, *, scale=8, kind="rmat"):
+    el = os.path.join(tmp, name + ".el")
+    v, e = make_graph_file(el, kind, scale=scale, edge_factor=4, seed=seed)
+    return el, v
+
+
+def _zlib_snapshot(tmp, name, seed):
+    """Small-frame zlib .gvel: one corrupt frame is a section-local
+    event, so quarantine scope is observable."""
+    el, v = _graph(tmp, name, seed, scale=7)
+    elist = load_edgelist(el, engine="numpy", num_vertices=v, base=1)
+    gv = os.path.join(tmp, name + ".gvel")
+    save_snapshot(gv, edgelist=elist,
+                  csr=convert_to_csr(elist, engine="numpy"),
+                  compress="zlib", frame_beta=128)
+    return gv, v
+
+
+def _corrupt_section(path, section_name):
+    """Flip one byte inside the named section's compressed payload."""
+    with open(path, "rb") as f:
+        hdr = f.read(snapmod.HEADER_LEN)
+    _, version, _, _, _, nsec, _ = struct.unpack(snapmod.HEADER_FMT, hdr)
+    assert version == snapmod.VERSION_COMPRESSED, version
+    want = {v: k for k, v in snapmod.SECTION_NAMES.items()}[section_name]
+    with open(path, "rb") as f:
+        f.seek(snapmod.HEADER_LEN)
+        table = f.read(nsec * snapmod.SECTION_LEN_V2)
+    for i in range(nsec):
+        sid, _, off, nbytes, _, _, _ = struct.unpack_from(
+            snapmod.SECTION_FMT_V2, table, i * snapmod.SECTION_LEN_V2)
+        if sid == want:
+            pos = off + 12 + min(13, max(0, nbytes - 13))
+            with open(path, "r+b") as f:
+                f.seek(pos)
+                b = f.read(1)
+                f.seek(pos)
+                f.write(bytes([b[0] ^ 0x40]))
+            return
+    raise AssertionError(f"{section_name} not found in {path}")
+
+
+def _bitwise(a, b, what):
+    assert np.array_equal(np.asarray(a.offsets), np.asarray(b.offsets)), \
+        f"{what}: offsets differ"
+    assert np.array_equal(np.asarray(a.targets), np.asarray(b.targets)), \
+        f"{what}: targets differ"
+
+
+# ---------------------------------------------------------------------------
+
+
+def scenario_transient_retry(tmp, seed):
+    """Injected transient faults at every hook site; the loads recover
+    and the results are bitwise equal to the fault-free runs."""
+    faults.reset_counters()
+    el, v = _graph(tmp, "tr", seed)
+    clean = open_graph(el, engine="device", num_vertices=v).csr()
+    plan = FaultPlan([FaultSpec("block", "oserror", index=0, times=2),
+                      FaultSpec("block", "latency", index=1, delay_s=0.005),
+                      FaultSpec("mmap", "latency", times=1, delay_s=0.005)],
+                     seed=seed)
+    faulty = open_graph(el, engine="device", num_vertices=v,
+                        faults=plan).csr()
+    _bitwise(clean, faulty, "transient-retry streaming")
+    assert plan.injected().get("block:oserror") == 2, plan.injected()
+    c = faults.counters()
+    assert c["io_retries"] >= 2, c
+
+    # cache cold-open retry: same file serves through SourceCache while
+    # its open is failing transiently
+    gv, _ = _zlib_snapshot(tmp, "tr_snap", seed)
+    cache = SourceCache(capacity=2)
+    with fault_plan(FaultPlan([FaultSpec("open", "oserror", times=2)],
+                              seed=seed)):
+        got = cache.query(gv, "csr")
+    st = cache.stats()["faults"]
+    assert st["open_retries"] == 2, st
+    assert got.num_vertices > 0
+    print(f"chaos[transient-retry]: {c['io_retries']} IO retries + "
+          f"{st['open_retries']} open retries, results bitwise equal OK")
+
+
+def scenario_stuck_reader(tmp, seed):
+    """A stalled block source trips the watchdog within its budget and
+    surfaces as StageTimeout naming the byte span — never a hang."""
+    faults.reset_counters()
+    el, v = _graph(tmp, "stuck", seed)
+    budget, saved = 0.4, faults.WATCHDOG_S
+    faults.WATCHDOG_S = budget
+    plan = FaultPlan([FaultSpec("block", "stall", index=0, delay_s=3.0)],
+                     seed=seed)
+    t0 = time.perf_counter()
+    try:
+        open_graph(el, engine="device", num_vertices=v, faults=plan).csr()
+        raise AssertionError("stuck reader did not raise StageTimeout")
+    except StageTimeout as exc:
+        dt = time.perf_counter() - t0
+        assert "byte span [" in str(exc), str(exc)
+        assert dt < budget + 1.0, f"watchdog fired late: {dt:.2f}s"
+    finally:
+        faults.WATCHDOG_S = saved
+    assert faults.counters()["stage_timeouts"] == 1, faults.counters()
+    print(f"chaos[stuck-reader]: StageTimeout in {dt:.2f}s "
+          f"(budget {budget}s) OK")
+
+
+def scenario_quarantine_swap(tmp, seed):
+    """Corrupt CSR frame -> structured quarantine; siblings serve;
+    swap-on-disk recovers."""
+    live, v = _zlib_snapshot(tmp, "live", seed)
+    other, _ = _zlib_snapshot(tmp, "other", seed + 1)
+    backup = live + ".bak"
+    with open(live, "rb") as f, open(backup, "wb") as g:
+        g.write(f.read())
+    cache = SourceCache(capacity=4)
+    deg = cache.query(live, "degree", vertex=1)
+    cache.invalidate()
+
+    _corrupt_section(live, "csr_indices")
+    try:
+        cache.query(live, "csr")
+        raise AssertionError("corrupt section served")
+    except CorruptGraphError as exc:
+        assert exc.section == "csr_indices", exc.section
+    try:
+        cache.query(live, "neighbors", vertex=1)
+        raise AssertionError("quarantined section served")
+    except CorruptGraphError as exc:
+        assert "quarantined" in str(exc), str(exc)
+    # header-only + offsets-only ops and the other graph keep serving
+    assert cache.query(live, "info").num_vertices == v
+    assert cache.query(live, "degree", vertex=1) == deg
+    assert cache.query(other, "csr").num_vertices > 0
+    st = cache.stats()["faults"]
+    assert st["quarantines"] == 1 and st["quarantined"], st
+
+    os.replace(backup, live)                 # swap good bytes back
+    os.utime(live)
+    got = cache.query(live, "csr")
+    assert got.num_vertices == v
+    st = cache.stats()["faults"]
+    assert st["recovered"] >= 1 and not st["quarantined"], st
+    print(f"chaos[quarantine-swap]: csr_indices quarantined "
+          f"({st['corrupt_errors']} structured errors), siblings served, "
+          f"swap recovered OK")
+
+
+_SIGTERM_CHILD = r'''
+import hashlib, sys
+import numpy as np
+from repro.core.source import open_graph
+from repro.data.corpus import CorpusConfig, WalkCorpus, load_cursor, save_cursor
+from repro.ft.coordinator import Coordinator, FTConfig
+gv, cursor, log, total, seed = (sys.argv[1], sys.argv[2], sys.argv[3],
+                                int(sys.argv[4]), int(sys.argv[5]))
+cc = CorpusConfig(batch=4, seq=16, vocab_size=97, seed=seed)
+start = load_cursor(cursor) or 0
+with Coordinator(FTConfig(handle_signals=True)) as coord:
+    with WalkCorpus(open_graph(gv), cc).batches(start) as stream:
+        while stream.next_step < total:
+            step, batch = next(stream)
+            h = hashlib.sha256(np.asarray(batch["tokens"]).tobytes()).hexdigest()
+            with open(log, "a") as f:
+                f.write(f"{step} {h}\n")
+            save_cursor(cursor, stream.next_step)
+            print(step, flush=True)
+            if coord.should_stop():
+                sys.exit(3)                 # preempted: clean cursor exit
+sys.exit(0)
+'''
+
+
+def scenario_sigterm_resume(tmp, seed):
+    """SIGTERM mid-stream -> durable cursor -> bitwise-stitched resume
+    (the churn contract of docs/serving.md)."""
+    from repro.data.corpus import CorpusConfig, WalkCorpus, load_cursor
+    el, v = _graph(tmp, "sig", seed, scale=7)
+    gv = os.path.join(tmp, "sig.gvel")
+    open_graph(el, engine="numpy", num_vertices=v).save(gv)
+    cursor = os.path.join(tmp, "cursor")
+    log = os.path.join(tmp, "log")
+    total = 12
+
+    env = dict(os.environ)
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env["PYTHONPATH"] = src + (":" + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+
+    def spawn():
+        return subprocess.Popen(
+            [sys.executable, "-c", _SIGTERM_CHILD, gv, cursor, log,
+             str(total), str(seed)],
+            stdout=subprocess.PIPE, text=True, env=env)
+
+    p = spawn()
+    for line in p.stdout:                   # SIGTERM mid-stream
+        if int(line) >= 2:
+            p.send_signal(signal.SIGTERM)
+            break
+    p.wait(timeout=120)
+    assert p.returncode == 3, f"expected preempted exit 3, got {p.returncode}"
+    resumed_at = load_cursor(cursor)
+    assert resumed_at and resumed_at < total, resumed_at
+    p = spawn()                             # restart resumes at the cursor
+    p.communicate(timeout=300)
+    assert p.returncode == 0, p.returncode
+
+    steps, hashes = zip(*(ln.split() for ln in open(log)))
+    assert [int(s) for s in steps] == list(range(total)), steps
+    corpus = WalkCorpus(open_graph(gv),
+                        CorpusConfig(batch=4, seq=16, vocab_size=97,
+                                     seed=seed))
+    for step, h in zip(steps, hashes):      # vs uninterrupted reference
+        want = hashlib.sha256(np.asarray(
+            corpus.batch_at(int(step))["tokens"]).tobytes()).hexdigest()
+        assert h == want, (step, h, want)
+    print(f"chaos[sigterm-resume]: SIGTERM at step {resumed_at - 1}, "
+          f"resume at {resumed_at}, {total}-batch stream bitwise "
+          f"identical OK")
+
+
+def scenario_shard_reexec(tmp, seed):
+    """Exhausted in-span retries escalate to whole-shard re-execution;
+    the recovered mesh load is bitwise equal to the fault-free one."""
+    import jax
+    from repro.core.compat import make_mesh
+    d = len(jax.devices())
+    assert d >= 2, (f"shard-reexec needs >= 2 devices, got {d}; run under "
+                    f"JAX_PLATFORMS=cpu "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count=4")
+    faults.reset_counters()
+    mesh = make_mesh((d,), ("data",))
+    el, v = _graph(tmp, "shard", seed)
+    clean = open_graph(el, engine="device", num_vertices=v,
+                       beta=2048).csr_sharded(mesh)
+    # 3 consecutive failures on block 0 exhaust the in-span budget
+    # (REPRO_IO_RETRIES=3) and force one shard re-execution
+    plan = FaultPlan([FaultSpec("block", "oserror", index=0, times=3)],
+                     seed=seed)
+    faulty = open_graph(el, engine="device", num_vertices=v, beta=2048,
+                        faults=plan).csr_sharded(mesh)
+    _bitwise(clean, faulty, "shard-reexec")
+    c = faults.counters()
+    assert c["shard_retries"] == 1, c
+    assert plan.injected() == {"block:oserror": 3}, plan.injected()
+
+    # a shard that never recovers fails with the per-attempt fault log
+    with fault_plan(FaultPlan([FaultSpec("block", "oserror", index=0,
+                                         times=-1)], seed=seed)):
+        try:
+            open_graph(el, engine="device", num_vertices=v,
+                       beta=2048).csr_sharded(mesh)
+            raise AssertionError("permanently-failing shard loaded")
+        except faults.ShardLoadError as exc:
+            assert exc.shard == 0 and exc.fault_log, exc
+    print(f"chaos[shard-reexec]: d={d}, {c['shard_retries']} shard "
+          f"re-execution bitwise equal, ShardLoadError carries "
+          f"{faults.SHARD_RETRIES + 1}-line fault log OK")
+
+
+SCENARIOS = {
+    "transient-retry": scenario_transient_retry,
+    "stuck-reader": scenario_stuck_reader,
+    "quarantine-swap": scenario_quarantine_swap,
+    "sigterm-resume": scenario_sigterm_resume,
+    "shard-reexec": scenario_shard_reexec,
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", choices=ALL_SCENARIOS, action="append",
+                    help="run only these (default: all local scenarios)")
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args(argv)
+    names = args.scenario or list(LOCAL_SCENARIOS)
+    tmp = tempfile.mkdtemp(prefix="gvel_chaos_")
+    for name in names:
+        SCENARIOS[name](tmp, args.seed)
+    print(f"chaos matrix: {len(names)} scenario(s) green "
+          f"(seed={args.seed})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,7 +7,11 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
-python -m pytest -x -q "$@"
+# global watchdog on the tier-1 lane: a hung test (stuck reader, wedged
+# prefetch thread) fails the run instead of wedging it.  SIGTERM first,
+# SIGKILL 30s later if pytest won't die.
+timeout --kill-after=30 "${VERIFY_TIMEOUT_S:-2400}" \
+    python -m pytest -x -q "$@"
 
 # multi-device lane: the sharded streaming tests under 4 forced CPU host
 # devices.  (tests/conftest.py pops XLA_FLAGS at import — the device
@@ -122,77 +126,18 @@ PY
 python scripts/bench_diff.py BENCH_e2e.json /tmp/BENCH_serve_quick.json \
     --require-only --require 'e2e.serve_walks_tokens>=1.0'
 
-# chaos lane: preempt the walk-corpus consumer mid-stream with a real
-# SIGTERM (ft.coordinator flag -> clean checkpoint exit at the batch
-# boundary), restart it from the persisted cursor, and require the
-# stitched batch stream to be bitwise identical to an uninterrupted
-# in-process run (the churn contract of docs/serving.md).
-python - <<'PY'
-import hashlib, os, signal, subprocess, sys, tempfile
-import numpy as np
-from repro.core import make_graph_file
-from repro.core.source import open_graph
-from repro.data.corpus import CorpusConfig, WalkCorpus
-
-tmp = tempfile.mkdtemp(prefix="gvel_chaos_")
-el = os.path.join(tmp, "g.el")
-v, e = make_graph_file(el, "rmat", scale=7, edge_factor=4, seed=5)
-gv = os.path.join(tmp, "g.gvel")
-open_graph(el, engine="numpy", num_vertices=v).save(gv)
-cursor, log, total = os.path.join(tmp, "cursor"), os.path.join(tmp, "log"), 12
-
-CHILD = r'''
-import hashlib, sys
-import numpy as np
-from repro.core.source import open_graph
-from repro.data.corpus import CorpusConfig, WalkCorpus, load_cursor, save_cursor
-from repro.ft.coordinator import Coordinator, FTConfig
-gv, cursor, log, total = sys.argv[1], sys.argv[2], sys.argv[3], int(sys.argv[4])
-cc = CorpusConfig(batch=4, seq=16, vocab_size=97, seed=13)
-start = load_cursor(cursor) or 0
-with Coordinator(FTConfig(handle_signals=True)) as coord:
-    with WalkCorpus(open_graph(gv), cc).batches(start) as stream:
-        while stream.next_step < total:
-            step, batch = next(stream)
-            h = hashlib.sha256(np.asarray(batch["tokens"]).tobytes()).hexdigest()
-            with open(log, "a") as f:
-                f.write(f"{step} {h}\n")
-            save_cursor(cursor, stream.next_step)
-            print(step, flush=True)
-            if coord.should_stop():
-                sys.exit(3)                 # preempted: clean cursor exit
-sys.exit(0)
-'''
-
-def spawn():
-    return subprocess.Popen([sys.executable, "-c", CHILD, gv, cursor, log,
-                             str(total)], stdout=subprocess.PIPE, text=True,
-                            env=dict(os.environ))
-
-p = spawn()
-for line in p.stdout:                       # SIGTERM mid-stream
-    if int(line) >= 2:
-        p.send_signal(signal.SIGTERM)
-        break
-p.wait(timeout=120)
-assert p.returncode == 3, f"expected preempted exit 3, got {p.returncode}"
-from repro.data.corpus import load_cursor
-resumed_at = load_cursor(cursor)
-assert resumed_at and resumed_at < total, resumed_at
-p = spawn()                                 # restart resumes at the cursor
-p.communicate(timeout=300)
-assert p.returncode == 0, p.returncode
-
-steps, hashes = zip(*(l.split() for l in open(log)))
-assert [int(s) for s in steps] == list(range(total)), steps
-cc = CorpusConfig(batch=4, seq=16, vocab_size=97, seed=13)
-corpus = WalkCorpus(open_graph(gv), cc)
-for step, h in zip(steps, hashes):          # vs uninterrupted reference
-    want = hashlib.sha256(np.asarray(
-        corpus.batch_at(int(step))["tokens"]).tobytes()).hexdigest()
-    assert h == want, (step, h, want)
-print(f"chaos lane: SIGTERM at step {resumed_at - 1}, resume at "
-      f"{resumed_at}, {total}-batch stream bitwise identical OK")
-PY
+# chaos lane: the seeded fault matrix (scripts/chaos_matrix.py;
+# docs/robustness.md).  Four local scenarios — transient-retry bitwise
+# parity, stuck-reader StageTimeout within the watchdog budget,
+# corrupt-frame quarantine + swap-on-disk recovery, and the SIGTERM
+# cursor-resume churn contract — plus the sharded lane: a shard whose
+# in-span retries exhaust re-executes its byte span bitwise-equal to
+# the fault-free load, under 4 forced CPU host devices.  Every
+# scenario is timeout-wrapped: a recovery path that hangs is a
+# failure, not a stall.
+timeout --kill-after=30 600 python scripts/chaos_matrix.py --seed 7
+JAX_PLATFORMS=cpu XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    timeout --kill-after=30 600 \
+    python scripts/chaos_matrix.py --scenario shard-reexec --seed 7
 
 echo "verify: all green"

@@ -55,8 +55,11 @@ from .codecs import (register_codec, get_codec, available_codecs,
 from .generate import make_graph_file, rmat_edges, uniform_edges, grid_edges, write_edgelist
 from .distributed import (load_csr_sharded, load_csr_sharded_stream,
                           host_shard_and_load)
-from . import (baselines, build, cache, codecs, compat, degrees, env, loader,
-               parse, parse_np, blocks, snapshot, source, tune)
+from .faults import (FaultPlan, FaultSpec, StageTimeout, ShardLoadError,
+                     CorruptGraphError, set_fault_plan, fault_plan,
+                     plan_from_env)
+from . import (baselines, build, cache, codecs, compat, degrees, env, faults,
+               loader, parse, parse_np, blocks, snapshot, source, tune)
 
 __all__ = [
     "CSR", "EdgeList", "GraphMeta",
@@ -73,6 +76,9 @@ __all__ = [
     "make_graph_file", "rmat_edges", "uniform_edges", "grid_edges",
     "write_edgelist",
     "load_csr_sharded", "load_csr_sharded_stream", "host_shard_and_load",
-    "baselines", "build", "cache", "codecs", "compat", "degrees", "loader",
-    "parse", "parse_np", "blocks", "snapshot", "source", "tune", "env",
+    "FaultPlan", "FaultSpec", "StageTimeout", "ShardLoadError",
+    "CorruptGraphError", "set_fault_plan", "fault_plan", "plan_from_env",
+    "baselines", "build", "cache", "codecs", "compat", "degrees", "faults",
+    "loader", "parse", "parse_np", "blocks", "snapshot", "source", "tune",
+    "env",
 ]

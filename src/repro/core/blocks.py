@@ -25,6 +25,9 @@ def mmap_bytes(path: str, offset: int = 0) -> np.ndarray:
     Shared by the text staging pipeline, the host parsers, and the
     binary snapshot reader.
     """
+    from . import faults
+    if faults._ACTIVE is not None:          # chaos hook; no-op otherwise
+        faults.inject("mmap", 0, where=path)
     size = os.path.getsize(path)
     if size <= offset:
         return np.zeros(0, np.uint8)

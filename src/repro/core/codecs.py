@@ -36,6 +36,7 @@ from typing import Dict, Iterator, Optional, Protocol, Tuple, runtime_checkable
 
 import numpy as np
 
+from . import faults as _faults
 from .blocks import MemoryBlockSource, SequentialBlockSource, mmap_bytes
 
 # codec id 0 is reserved for "stored" (no compression) in on-disk headers
@@ -227,28 +228,41 @@ def iter_decompressed_frames(payload, codec: Codec, *,
             return
         if pos + FRAME_HDR_LEN > len(view):
             raise ValueError(
-                f"{context}: truncated frame header at byte {pos} "
-                f"({len(view) - pos} of {FRAME_HDR_LEN} bytes)")
+                f"{context}: truncated frame header for frame {idx} at "
+                f"byte {pos} ({len(view) - pos} of {FRAME_HDR_LEN} bytes)")
         comp_len, raw_len, crc = struct.unpack_from(FRAME_HDR_FMT, view, pos)
-        pos += FRAME_HDR_LEN
+        payload_pos = pos + FRAME_HDR_LEN
+        pos = payload_pos
         if pos + comp_len > len(view):
             raise ValueError(
-                f"{context}: truncated frame payload at byte {pos} "
-                f"({len(view) - pos} of {comp_len} declared bytes)")
+                f"{context}: truncated frame payload for frame {idx} at "
+                f"byte {pos} ({len(view) - pos} of {comp_len} declared "
+                f"bytes)")
         if idx < start_frame:         # seek: skip the compressed payload
             pos += comp_len
             idx += 1
             continue
-        raw = codec.decompress(bytes(view[pos:pos + comp_len]), raw_len)
+        comp = bytes(view[pos:pos + comp_len])
+        if _faults._ACTIVE is not None:
+            for f in _faults.inject("frame", idx, where=context):
+                comp = _faults.corrupt_bytes(comp, f, salt=idx)
+        try:
+            raw = codec.decompress(comp, raw_len)
+        except ValueError as exc:
+            raise ValueError(
+                f"{context}: frame {idx} at byte {payload_pos}: "
+                f"{exc}") from None
         pos += comp_len
         idx += 1
         if len(raw) != raw_len:
             raise ValueError(
-                f"{context}: frame declared {raw_len} uncompressed bytes "
-                f"but decompressed to {len(raw)}")
+                f"{context}: frame {idx - 1} at byte {payload_pos} declared "
+                f"{raw_len} uncompressed bytes but decompressed to "
+                f"{len(raw)}")
         if zlib.crc32(raw) != crc:
             raise ValueError(
-                f"{context}: frame checksum mismatch (corrupt payload)")
+                f"{context}: frame {idx - 1} checksum mismatch at byte "
+                f"{payload_pos} (corrupt payload)")
         yield raw
 
 
@@ -290,14 +304,15 @@ def frame_table(payload, *, context: str = "frame stream") -> list:
     while pos < len(view):
         if pos + FRAME_HDR_LEN > len(view):
             raise ValueError(
-                f"{context}: truncated frame header at byte {pos} "
-                f"({len(view) - pos} of {FRAME_HDR_LEN} bytes)")
+                f"{context}: truncated frame header for frame {idx} at "
+                f"byte {pos} ({len(view) - pos} of {FRAME_HDR_LEN} bytes)")
         comp_len, raw_len, crc = struct.unpack_from(FRAME_HDR_FMT, view, pos)
         pos += FRAME_HDR_LEN
         if pos + comp_len > len(view):
             raise ValueError(
-                f"{context}: truncated frame payload at byte {pos} "
-                f"({len(view) - pos} of {comp_len} declared bytes)")
+                f"{context}: truncated frame payload for frame {idx} at "
+                f"byte {pos} ({len(view) - pos} of {comp_len} declared "
+                f"bytes)")
         entries.append(FrameEntry(idx, pos, comp_len, raw_off, raw_len, crc))
         pos += comp_len
         raw_off += raw_len
@@ -332,17 +347,25 @@ def decode_frame(payload, entry: FrameEntry, codec: Codec, *,
     declared-length or CRC32 mismatch.
     """
     view = memoryview(payload)
-    raw = codec.decompress(
-        bytes(view[entry.payload_off:entry.payload_off + entry.comp_len]),
-        entry.raw_len)
+    comp = bytes(view[entry.payload_off:entry.payload_off + entry.comp_len])
+    if _faults._ACTIVE is not None:
+        for f in _faults.inject("frame", entry.index, where=context):
+            comp = _faults.corrupt_bytes(comp, f, salt=entry.index)
+    try:
+        raw = codec.decompress(comp, entry.raw_len)
+    except ValueError as exc:
+        raise ValueError(
+            f"{context}: frame {entry.index} at byte {entry.payload_off}: "
+            f"{exc}") from None
     if len(raw) != entry.raw_len:
         raise ValueError(
-            f"{context}: frame {entry.index} declared {entry.raw_len} "
-            f"uncompressed bytes but decompressed to {len(raw)}")
+            f"{context}: frame {entry.index} at byte {entry.payload_off} "
+            f"declared {entry.raw_len} uncompressed bytes but decompressed "
+            f"to {len(raw)}")
     if zlib.crc32(raw) != entry.crc:
         raise ValueError(
-            f"{context}: frame {entry.index} checksum mismatch "
-            f"(corrupt payload)")
+            f"{context}: frame {entry.index} checksum mismatch at byte "
+            f"{entry.payload_off} (corrupt payload)")
     return raw
 
 
@@ -351,11 +374,12 @@ def decompress_frames(payload, raw_len: int, codec: Codec, *,
     """Whole frame stream -> uint8 array of exactly ``raw_len`` bytes."""
     out = np.empty(raw_len, np.uint8)
     pos = 0
-    for raw in iter_decompressed_frames(payload, codec, context=context):
+    for idx, raw in enumerate(
+            iter_decompressed_frames(payload, codec, context=context)):
         if pos + len(raw) > raw_len:
             raise ValueError(
-                f"{context}: frames decompress past the declared total "
-                f"({pos + len(raw)} > {raw_len} bytes)")
+                f"{context}: frame {idx} decompresses past the declared "
+                f"total ({pos + len(raw)} > {raw_len} bytes)")
         out[pos:pos + len(raw)] = np.frombuffer(raw, np.uint8)
         pos += len(raw)
     if pos != raw_len:
@@ -602,7 +626,8 @@ def open_block_source(path: str, offset: int = 0):
     """
     kind = compression_of(path)
     if kind is None:
-        return MemoryBlockSource(mmap_bytes(path, offset)), None
+        source = MemoryBlockSource(mmap_bytes(path, offset))
+        return _faults.wrap_block_source(source, path), None
     if kind == "gzip":
         length = gzip_length_hint(path)
         source = SequentialBlockSource(
@@ -612,12 +637,14 @@ def open_block_source(path: str, offset: int = 0):
                           "length is unreliable there — recompress with "
                           "repro.core.codecs.compress_file_framed, or use "
                           "a host engine: numpy/threads)")
-        return source, None
+        return _faults.wrap_block_source(source, f"{path} (gzip)"), None
     info = read_framed_header(path)
     source = SequentialBlockSource(
         _framed_chunks(info), info.orig_len - offset, skip=offset,
         describe=f"{path} (framed {info.codec.name})")
-    return source, info.frame_beta
+    return (_faults.wrap_block_source(source,
+                                      f"{path} (framed {info.codec.name})"),
+            info.frame_beta)
 
 
 def stream_geometry(path: str, offset: int = 0) -> Tuple[int, Optional[int]]:
@@ -663,14 +690,15 @@ def open_shard_block_source(path: str, plan, span, offset: int = 0):
             f"shard {span.shard}/{span.num_shards} owns no blocks; "
             f"callers skip opening sources for empty spans")
     kind = compression_of(path)
-    if kind is None:
-        return MemoryBlockSource(mmap_bytes(path, offset))
     shard_tag = f"shard {span.shard}/{span.num_shards}"
+    if kind is None:
+        source = MemoryBlockSource(mmap_bytes(path, offset))
+        return _faults.wrap_block_source(source, f"{path} ({shard_tag})")
     if kind == "gzip":
         start = max(span.block_lo * plan.beta - plan.overlap, 0)
         end = plan.file_len if span.block_hi >= plan.num_blocks \
             else min(span.block_hi * plan.beta, plan.file_len)
-        return SequentialBlockSource(
+        source = SequentialBlockSource(
             _gzip_chunks(path), plan.file_len, skip=offset + start,
             start=start, end=end, first_block=span.block_lo,
             describe=f"{path} (gzip, {shard_tag})",
@@ -678,6 +706,7 @@ def open_shard_block_source(path: str, plan, span, offset: int = 0):
                           "length is unreliable there — recompress with "
                           "repro.core.codecs.compress_file_framed, or use "
                           "a host engine: numpy/threads)")
+        return _faults.wrap_block_source(source, f"{path} (gzip, {shard_tag})")
     info = read_framed_header(path)
     fb = info.frame_beta
     # pre-offset byte range the span needs: its blocks plus left context
@@ -686,9 +715,11 @@ def open_shard_block_source(path: str, plan, span, offset: int = 0):
     frame_lo = min(start_pre // fb, max(info.frame_count - 1, 0))
     frame_hi = max(min(-(-end_pre // fb), info.frame_count), frame_lo)
     start = max(frame_lo * fb - offset, 0)
-    return SequentialBlockSource(
+    source = SequentialBlockSource(
         _framed_chunks(info, frame_lo, frame_hi), plan.file_len,
         skip=max(offset - frame_lo * fb, 0),
         start=start, end=max(end_pre - offset, start),
         first_block=span.block_lo,
         describe=f"{path} (framed {info.codec.name}, {shard_tag})")
+    return _faults.wrap_block_source(
+        source, f"{path} (framed {info.codec.name}, {shard_tag})")

@@ -294,8 +294,9 @@ def stream_shards(
     valid-edge counts, and the maximum vertex id seen (-1 when empty).
     """
     from concurrent.futures import ThreadPoolExecutor
+    from concurrent.futures import TimeoutError as _FutTimeout
 
-    from . import codecs, loader, parse as parse_mod
+    from . import codecs, faults as faults_mod, loader, parse as parse_mod
     from .blocks import plan_blocks, shard_plan
 
     d = mesh.shape[axis]
@@ -330,11 +331,57 @@ def stream_shards(
         source.finish()
         return out
 
+    def load_with_recovery(k: int):
+        """``load_one`` with shard-level re-execution: block plans are
+        pure functions of the file and each attempt opens a fresh source
+        and fresh accumulators, so a re-executed span is bitwise
+        identical to a first-try parse.  Transient faults (and stage
+        timeouts — a stuck reader may unstick on reopen) re-execute up
+        to ``faults.SHARD_RETRIES`` extra times; then the load fails
+        with the shard's fault log."""
+        span = spans[k]
+        attempts = faults_mod.SHARD_RETRIES + 1
+        fault_log = []
+        for attempt in range(attempts):
+            try:
+                return load_one(k)
+            except (OSError, faults_mod.StageTimeout) as exc:
+                transient = (faults_mod.is_transient(exc)
+                             or isinstance(exc, faults_mod.StageTimeout))
+                fault_log.append(
+                    f"attempt {attempt + 1}: {type(exc).__name__}: {exc}")
+                if not transient or attempt + 1 >= attempts:
+                    raise faults_mod.ShardLoadError(
+                        f"{path}: shard {k}/{d} failed loading byte span "
+                        f"[{span.byte_lo}, {span.byte_hi}) after "
+                        f"{attempt + 1} attempt(s):\n  "
+                        + "\n  ".join(fault_log),
+                        shard=k, fault_log=fault_log) from exc
+                faults_mod._count("shard_retries")
+
     if d == 1:
-        parts = [load_one(0)]
+        parts = [load_with_recovery(0)]
     else:
-        with ThreadPoolExecutor(d, thread_name_prefix="shard-load") as pool:
-            parts = list(pool.map(load_one, range(d)))
+        # not a with-block: on a watchdog timeout the stuck shard thread
+        # is abandoned (shutdown(wait=False)), never joined
+        pool = ThreadPoolExecutor(d, thread_name_prefix="shard-load")
+        try:
+            futs = [pool.submit(load_with_recovery, k) for k in range(d)]
+            parts = []
+            for k, fut in enumerate(futs):
+                try:
+                    parts.append(fut.result(timeout=faults_mod.WATCHDOG_S))
+                except _FutTimeout:
+                    faults_mod._count("stage_timeouts")
+                    span = spans[k]
+                    raise faults_mod.StageTimeout(
+                        f"{path}: shard {k}/{d} produced nothing within "
+                        f"the {faults_mod.WATCHDOG_S:.1f}s watchdog budget "
+                        f"(REPRO_WATCHDOG_S) for byte span "
+                        f"[{span.byte_lo}, {span.byte_hi}); the shard "
+                        f"thread is stuck") from None
+        finally:
+            pool.shutdown(wait=False, cancel_futures=True)
 
     counts = [int(t) for (_, _, _, t) in parts]
     max_id = -1

@@ -67,6 +67,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FutTimeout
 from typing import (Any, Callable, Dict, Optional, Protocol, Tuple,
                     runtime_checkable)
 
@@ -75,6 +76,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import build
+from . import faults
 from . import parse as parse_mod
 from .blocks import StagingArena, flat_len, owned_range, plan_blocks
 from .parse import donation_supported, parse_accumulate
@@ -122,6 +124,11 @@ class LoadOptions:
     per-call default, ``staged``); a per-call ``method=`` always wins.
     ``bin_bits`` is the binned build's vertex-range width knob and is
     ignored by the sort-based methods.
+
+    ``faults`` pins a :class:`repro.core.faults.FaultPlan` on the
+    handle: every product call runs under that plan (chaos testing a
+    single source without touching the process-wide plan).  Never
+    expanded into engine kwargs.
     """
 
     engine: Optional[str] = None
@@ -133,10 +140,12 @@ class LoadOptions:
     tune: bool = False
     method: Optional[str] = None
     bin_bits: Optional[int] = None
+    faults: Optional[Any] = None
     engine_kw: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     _OWN_FIELDS = ("engine", "weighted", "symmetric", "base",
-                   "num_vertices", "offset", "tune", "method", "bin_bits")
+                   "num_vertices", "offset", "tune", "method", "bin_bits",
+                   "faults")
 
     def __post_init__(self):
         if self.base not in (0, 1):
@@ -318,11 +327,25 @@ def _parse_span(
         return jnp.asarray(x) if device is None else jax.device_put(x, device)
 
     arena = StagingArena(flat_len(min(batch_blocks, nspan), plan))
+    where = getattr(source, "_describe", None) or "block source"
+
+    def batch_bytes(i: int) -> Tuple[int, int]:
+        """Post-offset byte span batch ``i`` stages (for error text)."""
+        start = block_lo + i * batch_blocks
+        stop = min(start + batch_blocks, block_hi)
+        return start * plan.beta, min(stop * plan.beta, plan.file_len)
 
     def stage(i: int) -> np.ndarray:
         start = block_lo + i * batch_blocks
         ids = np.arange(start, min(start + batch_blocks, block_hi))
-        return source.stage(plan, ids, arena=arena, check_lines=True)
+        # retries are safe here: injected faults fire before the source
+        # cursor moves, and raw (mmap) staging is idempotent.  A retry
+        # that still fails escalates to the shard/load level, where
+        # re-execution reopens the source from scratch.
+        return faults.call_with_retries(
+            lambda: source.stage(plan, ids, arena=arena, check_lines=True),
+            describe=f"{where}: stage blocks "
+                     f"[{int(ids[0])}, {int(ids[-1]) + 1})")
 
     ostart = put(np.full((batch_blocks,), os_, np.int32))
     oend = put(np.full((batch_blocks,), oe, np.int32))
@@ -342,14 +365,29 @@ def _parse_span(
                 edge_bound=nb * edge_cap)
 
     if prefetch:
-        with ThreadPoolExecutor(
-                1, thread_name_prefix="loader-prefetch") as pool:
+        # not a with-block: a stuck staging thread must be *abandoned*
+        # (shutdown(wait=False)), never joined — joining would turn the
+        # watchdog timeout back into the hang it exists to prevent
+        pool = ThreadPoolExecutor(1, thread_name_prefix="loader-prefetch")
+        try:
             fut = pool.submit(stage, 0)
             for i in range(num_batches):
-                bufs = fut.result()
+                try:
+                    bufs = fut.result(timeout=faults.WATCHDOG_S)
+                except _FutTimeout:
+                    faults._count("stage_timeouts")
+                    lo_b, hi_b = batch_bytes(i)
+                    raise faults.StageTimeout(
+                        f"{where}: staging of byte span [{lo_b}, {hi_b}) "
+                        f"(batch {i + 1}/{num_batches}) produced nothing "
+                        f"within the {faults.WATCHDOG_S:.1f}s watchdog "
+                        f"budget (REPRO_WATCHDOG_S); reader is stuck"
+                    ) from None
                 if i + 1 < num_batches:
                     fut = pool.submit(stage, i + 1)     # double buffer
                 consume(i, bufs)
+        finally:
+            pool.shutdown(wait=False, cancel_futures=True)
     else:
         for i in range(num_batches):
             consume(i, stage(i))

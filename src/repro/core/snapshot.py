@@ -115,7 +115,16 @@ _KIND_TO_CODE = {("i", 4): 1, ("i", 8): 2, ("f", 4): 3, ("f", 8): 4,
 
 
 class SnapshotError(ValueError):
-    """Malformed, truncated, or unsupported ``.gvel`` file."""
+    """Malformed, truncated, or unsupported ``.gvel`` file.
+
+    ``section`` names the damaged section (``"csr_indices"``, ...) when
+    the failure is a payload decode — the quarantine key the serving
+    cache uses to keep other sections of the same file live — and is
+    ``None`` for structural damage (bad magic, truncated table)."""
+
+    def __init__(self, message: str, *, section: Optional[str] = None):
+        super().__init__(message)
+        self.section = section
 
 
 def _dtype_code(dtype: np.dtype) -> int:
@@ -416,7 +425,9 @@ class _Section:
                         self.raw_nbytes, self.codec,
                         context=f"{self.path} section {self.sid}")
                 except ValueError as exc:
-                    raise SnapshotError(str(exc)) from None
+                    raise SnapshotError(
+                        str(exc),
+                        section=SECTION_NAMES.get(self.sid)) from None
                 arr.flags.writeable = False  # parity with the mmap views
                 self._frames.clear()         # full decode supersedes frames
                 self._frames_bytes = 0
@@ -431,7 +442,8 @@ class _Section:
                     self._data[self.offset:self.offset + self.nbytes],
                     context=f"{self.path} section {self.sid}")
             except ValueError as exc:
-                raise SnapshotError(str(exc)) from None
+                raise SnapshotError(
+                    str(exc), section=SECTION_NAMES.get(self.sid)) from None
         return self._ftable
 
     def get_slice(self, lo: int, hi: int) -> np.ndarray:
@@ -466,7 +478,8 @@ class _Section:
                 raise SnapshotError(
                     f"{self.path} section {self.sid}: frames cover "
                     f"{self.raw_nbytes} bytes but byte range "
-                    f"[{byte_lo}, {byte_hi}) is not fully framed")
+                    f"[{byte_lo}, {byte_hi}) is not fully framed",
+                    section=SECTION_NAMES.get(self.sid))
             payload = self._data[self.offset:self.offset + self.nbytes]
             parts = []
             for entry in touched:
@@ -480,7 +493,9 @@ class _Section:
                             context=f"{self.path} section {self.sid}"),
                             np.uint8)
                     except ValueError as exc:
-                        raise SnapshotError(str(exc)) from None
+                        raise SnapshotError(
+                            str(exc),
+                            section=SECTION_NAMES.get(self.sid)) from None
                     self._frames[entry.index] = raw
                     self._frames_bytes += raw.nbytes
                     # LRU bound: drop coldest memos past the byte cap.
@@ -552,7 +567,8 @@ class Snapshot:
         if arr.shape[0] and int(arr[-1]) != self.num_edges:
             raise SnapshotError(
                 f"{self.path}: csr offsets end at {int(arr[-1])}, "
-                f"header says {self.num_edges} edges")
+                f"header says {self.num_edges} edges",
+                section="csr_offsets")
 
     # lazy payload properties ------------------------------------------------
     @property

@@ -47,6 +47,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
+from .faults import fault_plan
 from .loader import (DEFAULT_CSR_ENGINE, DEFAULT_EDGELIST_ENGINE, LoadOptions,
                      available_engines, csr_convert_engine, get_engine,
                      read_csr_sharded_via, read_csr_via, read_edgelist_via,
@@ -336,10 +337,11 @@ class GraphSource:
         memoized on the handle."""
         if self._el is None:
             opts = self._opts_for("edgelist")
-            if self.format == FORMAT_MTX:
-                self._el = self._mtx_edgelist(opts)
-            else:
-                self._el = read_edgelist_via(self.path, opts)
+            with fault_plan(opts.faults):
+                if self.format == FORMAT_MTX:
+                    self._el = self._mtx_edgelist(opts)
+                else:
+                    self._el = read_edgelist_via(self.path, opts)
             self._el_engine = opts.engine
         return self._el
 
@@ -386,10 +388,11 @@ class GraphSource:
                                      engine=csr_convert_engine(opts.engine))
             else:
                 opts = self._opts_for("csr")
-                csr = read_csr_via(
-                    self.path, opts, method=method, rho=rho,
-                    bin_bits=bin_bits,
-                    fallback_edgelist=lambda: self._edgelist_for(opts))
+                with fault_plan(opts.faults):
+                    csr = read_csr_via(
+                        self.path, opts, method=method, rho=rho,
+                        bin_bits=bin_bits,
+                        fallback_edgelist=lambda: self._edgelist_for(opts))
             self._csrs[key] = csr
         return self._csrs[key]
 
@@ -511,9 +514,10 @@ class GraphSource:
             bin_bits = self.options.bin_bits
         key = (mesh, axis, int(rho), method, bin_bits)
         if key not in self._sharded_csrs:
-            self._sharded_csrs[key] = read_csr_sharded_via(
-                self.path, self._opts_for("csr"), mesh=mesh, axis=axis,
-                rho=rho, method=method, bin_bits=bin_bits)
+            with fault_plan(self.options.faults):
+                self._sharded_csrs[key] = read_csr_sharded_via(
+                    self.path, self._opts_for("csr"), mesh=mesh, axis=axis,
+                    rho=rho, method=method, bin_bits=bin_bits)
         return self._sharded_csrs[key]
 
     def _edgelist_for(self, opts: LoadOptions) -> EdgeList:
@@ -566,7 +570,8 @@ class GraphSource:
                 f"engine {opts.engine!r} has no stream fast path; "
                 f"streaming engines: "
                 f"{[n for n in available_engines() if hasattr(get_engine(n), 'stream')]}")
-        return eng.stream(self.path, **{**opts.stream_kwargs(), **kw})
+        with fault_plan(opts.faults):
+            return eng.stream(self.path, **{**opts.stream_kwargs(), **kw})
 
     # -- write path ----------------------------------------------------------
 
@@ -626,6 +631,7 @@ def open_graph(
     tune: bool = False,
     method: Optional[str] = None,
     bin_bits: Optional[int] = None,
+    faults: Optional[Any] = None,
     **engine_kw,
 ) -> GraphSource:
     """Open a graph file as a lazy :class:`GraphSource` handle.
@@ -649,12 +655,14 @@ def open_graph(
     (``"global"``/``"staged"``/``"binned"``) pins the CSR build
     strategy for every ``.csr()``-family product off the handle, and
     ``bin_bits`` sets the binned build's vertex-range width; a per-call
-    ``csr(method=...)`` still wins.
+    ``csr(method=...)`` still wins.  ``faults`` pins a
+    :class:`repro.core.faults.FaultPlan` on the handle — every product
+    load runs under that plan (see docs/robustness.md).
     """
     opts = LoadOptions(engine=engine, weighted=weighted, symmetric=symmetric,
                        base=1 if base is None else base,
                        num_vertices=num_vertices, offset=offset, tune=tune,
-                       method=method, bin_bits=bin_bits,
+                       method=method, bin_bits=bin_bits, faults=faults,
                        engine_kw=dict(engine_kw))
     return GraphSource(path, opts, validate=validate)
 

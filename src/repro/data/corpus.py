@@ -148,15 +148,23 @@ class BatchStream:
 # -- resume cursor -----------------------------------------------------------
 
 def save_cursor(path: str, step: int) -> None:
-    """Atomically persist the next step index (tmp + rename, same
-    discipline as checkpoint/io.py: a preemption mid-write leaves the
-    previous cursor intact)."""
+    """Durably persist the next step index (tmp + fsync + rename +
+    directory fsync, same discipline as checkpoint/io.py: a preemption
+    mid-write leaves the previous cursor intact).  The directory fsync
+    is what makes the *rename* itself survive a host crash — without
+    it the journal may replay the directory to the pre-rename state
+    and lose the cursor the resume contract depends on."""
     tmp = f"{path}.tmp.{os.getpid()}"
     with open(tmp, "w") as f:
         json.dump({"step": int(step)}, f)
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, path)
+    dfd = os.open(os.path.dirname(os.path.abspath(path)) or ".", os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
 
 
 def load_cursor(path: str) -> Optional[int]:

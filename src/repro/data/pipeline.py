@@ -42,13 +42,35 @@ def graph_walk_source(path: str, cfg, batch: int, seq: int, *,
     return corpus.batch_at
 
 
+class _Failure:
+    """Sentinel carrying a worker exception through the batch queue —
+    how a dead lookahead thread reaches its consumer instead of
+    leaving it blocked on an empty queue forever."""
+
+    __slots__ = ("exc",)
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
 class Prefetcher:
-    """Wraps source(step)->batch with a lookahead thread."""
+    """Wraps source(step)->batch with a lookahead thread.
+
+    Failure semantics: an exception in the worker (a corrupt graph, an
+    injected fault) is queued behind any batches already built and
+    re-raised from :meth:`get` — never swallowed.  ``get`` also bounds
+    its wait by the watchdog budget (``timeout`` here, else
+    ``faults.WATCHDOG_S``), raising :class:`~repro.core.faults.
+    StageTimeout` when the source is stuck rather than hanging the
+    training/serving loop.
+    """
 
     def __init__(self, source: Callable[[int], dict], start_step: int = 0,
-                 lookahead: int = 2, sharding=None):
+                 lookahead: int = 2, sharding=None,
+                 timeout: Optional[float] = None):
         self.source = source
         self.sharding = sharding
+        self._timeout = timeout
         self._q: queue.Queue = queue.Queue(maxsize=lookahead)
         self._stop = threading.Event()
         self._next = start_step
@@ -57,18 +79,37 @@ class Prefetcher:
 
     def _work(self):
         step = self._next
-        while not self._stop.is_set():
-            batch = self.source(step)
-            if self.sharding is not None:
-                batch = jax.device_put(batch, self.sharding)
-            try:
-                self._q.put((step, batch), timeout=0.2)
-                step += 1
-            except queue.Full:
-                continue
+        try:
+            while not self._stop.is_set():
+                batch = self.source(step)
+                if self.sharding is not None:
+                    batch = jax.device_put(batch, self.sharding)
+                try:
+                    self._q.put((step, batch), timeout=0.2)
+                    step += 1
+                except queue.Full:
+                    continue
+        except BaseException as exc:   # propagate through the queue
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, _Failure(exc)), timeout=0.2)
+                    return
+                except queue.Full:
+                    continue
 
     def get(self, expect_step: Optional[int] = None):
-        step, batch = self._q.get()
+        from ..core import faults
+
+        budget = faults.WATCHDOG_S if self._timeout is None else self._timeout
+        try:
+            step, batch = self._q.get(timeout=budget)
+        except queue.Empty:
+            raise faults.StageTimeout(
+                f"batch pipeline: no batch produced within {budget:.1f}s "
+                f"(REPRO_WATCHDOG_S); the source is stuck") from None
+        if isinstance(batch, _Failure):
+            self._stop.set()
+            raise batch.exc
         if expect_step is not None and step != expect_step:
             raise RuntimeError(f"pipeline desync: got {step}, want {expect_step}")
         return batch

@@ -107,6 +107,18 @@ class Coordinator:
                 return act
         return "ok"
 
+    def observe_fault(self, description: str) -> str:
+        """Record a data-plane fault (corrupt graph section, stuck
+        reader) in the event log; returns the action the straggler
+        policy implies — ``degrade`` narrows serving instead of
+        stalling it, any other policy just logs (``warn``).  The
+        serving runtime routes corrupt-graph detections through here so
+        the coordinator's event log is the one fault timeline."""
+        act = ("degrade" if self.cfg.straggler_policy == "degrade"
+               else "warn")
+        self.events.append(f"fault: {description} -> {act}")
+        return act
+
     def should_checkpoint(self, step: int) -> bool:
         return step > 0 and step % self.cfg.ckpt_every == 0
 

@@ -37,7 +37,8 @@ from typing import Any, Dict, List, Optional
 import jax
 import numpy as np
 
-from ..core.cache import SourceCache
+from ..core.cache import _OP_SECTIONS, SourceCache
+from ..core.snapshot import SnapshotError
 from ..data.corpus import CorpusConfig, WalkCorpus
 from ..data.walks import I32, random_walks, walk_from, walk_keys
 from ..ft.coordinator import Coordinator, FTConfig
@@ -58,6 +59,7 @@ class RuntimeStats:
     degrades: int = 0             # straggler-driven admission cuts
     restores: int = 0             # admission width restorations
     resumes: int = 0              # corpus streams opened at step > 0
+    corrupt: int = 0              # requests refused on corrupt graphs
 
     def occupancy(self, batch: int) -> float:
         """Mean fraction of slots busy per tick (0 when never ticked)."""
@@ -96,10 +98,16 @@ class ServeRuntime:
     # -- graph resolution ----------------------------------------------------
 
     def _graph(self, path: str, **open_kw):
+        # an already-quarantined graph fails fast with the structured
+        # error (no admission change: the first detection degraded)
+        self.cache.check_quarantine(path, _OP_SECTIONS["csr"])
         src = self.cache.get(path, **open_kw)
         ent = self._graphs.get(id(src))
         if ent is None or ent[0] is not src:
-            csr = src.csr()
+            try:
+                csr = src.csr()
+            except SnapshotError as exc:
+                raise self._on_corrupt(path, exc) from exc
             ent = (src, jnp.asarray(np.asarray(csr.offsets), I32),
                    jnp.asarray(np.asarray(csr.targets), I32),
                    int(csr.num_vertices))
@@ -107,6 +115,18 @@ class ServeRuntime:
                 self._graphs.clear()
             self._graphs[id(src)] = ent
         return ent
+
+    def _on_corrupt(self, path: str, exc: SnapshotError):
+        """First detection of a corrupt graph: quarantine it in the
+        cache, degrade admission (the straggler-degrade path — corrupt
+        reads and stragglers are both capacity loss; serving narrows
+        instead of stalling), and return the structured error."""
+        err = self.cache.report_corrupt(path, exc, op="csr")
+        self._stats.corrupt += 1
+        if self.coord.observe_fault(f"corrupt graph {path}: {exc}") \
+                == "degrade":
+            self._degrade_admission()
+        return err
 
     # -- requests ------------------------------------------------------------
 
@@ -136,15 +156,21 @@ class ServeRuntime:
 
     # -- serving loop --------------------------------------------------------
 
+    def _degrade_admission(self) -> None:
+        """Halve the engine's admission width (floor 1) — shared by the
+        straggler policy and the corrupt-graph path."""
+        eng = self.engine
+        self._ok_streak = 0
+        new = max(1, eng.max_active // 2)
+        if new < eng.max_active:
+            eng.max_active = new
+            self._stats.degrades += 1
+
     def _observe(self, dt: float) -> None:
         action = self.coord.observe_step(dt)
         eng = self.engine
         if action == "straggler-degrade":
-            self._ok_streak = 0
-            new = max(1, eng.max_active // 2)
-            if new < eng.max_active:
-                eng.max_active = new
-                self._stats.degrades += 1
+            self._degrade_admission()
         elif action == "ok" and eng.max_active < eng.batch:
             self._ok_streak += 1
             if self._ok_streak >= self.coord.cfg.straggler_window:
@@ -225,6 +251,7 @@ class ServeRuntime:
             "degrades": st.degrades,
             "restores": st.restores,
             "resumes": st.resumes,
+            "corrupt_requests": st.corrupt,
             "seconds": round(st.seconds, 6),
             "cache": cache,
         }

@@ -1,0 +1,501 @@
+"""Fault-injection + self-healing IO contract (docs/robustness.md):
+seeded plans, bounded transient retries with bitwise-equal recovery,
+stuck-reader watchdogs (StageTimeout, never a hang), corruption
+quarantine with swap-on-disk recovery, prefetch-thread failure
+propagation, cursor durability, and zero-edge/empty graphs through the
+full serving path under injected faults."""
+import errno
+import os
+import struct
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import faults, open_graph, write_edgelist
+from repro.core.cache import SourceCache
+from repro.core.faults import (CorruptGraphError, FaultPlan, FaultSpec,
+                               ShardLoadError, StageTimeout, fault_plan,
+                               plan_from_env, set_fault_plan)
+from repro.core import snapshot as snapmod
+from repro.core.snapshot import SnapshotError
+from repro.data.corpus import load_cursor, save_cursor
+from repro.data.pipeline import Prefetcher
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    """No plan or counters may leak across tests (the module global is
+    process-wide by design)."""
+    set_fault_plan(None)
+    faults.reset_counters()
+    yield
+    set_fault_plan(None)
+    faults.reset_counters()
+
+
+def _graph_file(tmp_path, name="g.el", *, v=50, e=300, seed=0):
+    rng = np.random.default_rng(seed)
+    path = str(tmp_path / name)
+    write_edgelist(path, rng.integers(0, v, e), rng.integers(0, v, e),
+                   None, base=1)
+    return path, v
+
+
+def _save_compressed(el, v, gv, *, frame_beta=96):
+    """Write a zlib-framed .gvel with small frames (multi-frame
+    sections, so one corrupt frame is a section-local event)."""
+    from repro.core import load_edgelist, save_snapshot
+    from repro.core.csr import convert_to_csr
+    elist = load_edgelist(el, engine="numpy", num_vertices=v, base=1)
+    save_snapshot(gv, edgelist=elist, csr=convert_to_csr(elist, engine="numpy"),
+                  compress="zlib", frame_beta=frame_beta)
+    return gv
+
+
+def _snapshot(tmp_path, name="g.gvel", *, v=50, e=300, seed=0):
+    el, v = _graph_file(tmp_path, name + ".el", v=v, e=e, seed=seed)
+    return _save_compressed(el, v, str(tmp_path / name)), v
+
+
+def _corrupt_section(path, section_name, *, byte=13):
+    """Flip one byte inside ``section_name``'s compressed payload (past
+    the first frame header) — a CRC/decode failure on next touch."""
+    with open(path, "rb") as f:
+        hdr = f.read(snapmod.HEADER_LEN)
+    _, version, _, _, _, nsec, _ = struct.unpack(snapmod.HEADER_FMT, hdr)
+    assert version == snapmod.VERSION_COMPRESSED
+    sid_want = {v: k for k, v in snapmod.SECTION_NAMES.items()}[section_name]
+    with open(path, "rb") as f:
+        f.seek(snapmod.HEADER_LEN)
+        table = f.read(nsec * snapmod.SECTION_LEN_V2)
+    for i in range(nsec):
+        sid, _, off, nbytes, _, _, _ = struct.unpack_from(
+            snapmod.SECTION_FMT_V2, table, i * snapmod.SECTION_LEN_V2)
+        if sid == sid_want:
+            pos = off + 12 + min(byte, max(0, nbytes - 13))  # FRAME_HDR_LEN
+            with open(path, "r+b") as f:
+                f.seek(pos)
+                b = f.read(1)
+                f.seek(pos)
+                f.write(bytes([b[0] ^ 0x40]))
+            return
+    raise AssertionError(f"section {section_name} not found in {path}")
+
+
+# ---- plans, parsing, deterministic corruption --------------------------------
+
+
+def test_plan_from_env_grammar():
+    plan = plan_from_env("seed=3; block:oserror@2*2 ;frame:bitflip@1~web")
+    assert plan.seed == 3
+    assert plan.faults == (
+        FaultSpec("block", "oserror", index=2, times=2),
+        FaultSpec("frame", "bitflip", index=1, times=1, path="web"))
+    assert plan_from_env("") is None
+    # the @index is optional before *times and ~path
+    plan = plan_from_env("open:oserror*3;mmap:latency~web")
+    assert plan.faults == (
+        FaultSpec("open", "oserror", times=3),
+        FaultSpec("mmap", "latency", path="web"))
+    with pytest.raises(ValueError, match="site"):
+        plan_from_env("disk:oserror@0")
+    with pytest.raises(ValueError, match="kind"):
+        plan_from_env("block:explode@0")
+    with pytest.raises(ValueError, match="bad entry"):
+        plan_from_env("justtext")
+
+
+def test_match_consumes_budget_and_filters_path():
+    plan = FaultPlan([FaultSpec("open", "oserror", times=2, path="web")])
+    assert plan.match("open", 0, "other.gvel") == []
+    assert len(plan.match("open", 0, "a/web.gvel")) == 1
+    assert len(plan.match("open", 0, "a/web.gvel")) == 1
+    assert plan.match("open", 0, "a/web.gvel") == []      # budget spent
+    assert plan.injected() == {"open:oserror": 2}
+    assert plan.total_injected() == 2
+
+
+def test_unlimited_budget_and_corruption_determinism():
+    plan = FaultPlan([FaultSpec("frame", "bitflip", times=-1)], seed=7)
+    data = bytes(range(256))
+    a = plan.corrupt(data, plan.faults[0], salt=3)
+    b = plan.corrupt(data, plan.faults[0], salt=3)
+    assert a == b and a != data
+    assert len([x for x, y in zip(a, data) if x != y]) == 1
+    assert plan.corrupt(data, plan.faults[0], salt=4) != a
+    trunc = FaultSpec("frame", "truncate")
+    assert 0 < len(plan.corrupt(data, trunc)) < len(data)
+    for _ in range(5):
+        assert plan.match("frame", 0)                     # never exhausts
+
+
+def test_fault_plan_context_restores_previous():
+    outer = FaultPlan([])
+    set_fault_plan(outer)
+    inner = FaultPlan([])
+    with fault_plan(inner):
+        assert faults.active_plan() is inner
+        with fault_plan(None):                            # no-op nesting
+            assert faults.active_plan() is inner
+    assert faults.active_plan() is outer
+
+
+# ---- retry machinery ---------------------------------------------------------
+
+
+def test_call_with_retries_transient_then_success():
+    calls = []
+
+    def fn():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError(errno.EIO, "flaky")
+        return "ok"
+
+    assert faults.call_with_retries(fn, attempts=3, backoff_s=0.001) == "ok"
+    assert len(calls) == 3
+    assert faults.counters()["io_retries"] == 2
+
+
+def test_call_with_retries_nontransient_fails_fast():
+    calls = []
+
+    def fn():
+        calls.append(1)
+        raise FileNotFoundError(errno.ENOENT, "gone", "x")
+
+    with pytest.raises(FileNotFoundError):
+        faults.call_with_retries(fn, attempts=5, backoff_s=0.001)
+    assert len(calls) == 1                                # no retry
+    assert faults.counters()["io_retries"] == 0
+
+
+def test_call_with_retries_budget_exhausted():
+    with pytest.raises(OSError, match="flaky"):
+        faults.call_with_retries(
+            lambda: (_ for _ in ()).throw(OSError(errno.EAGAIN, "flaky")),
+            attempts=2, backoff_s=0.001)
+    assert faults.counters()["io_retries"] == 1
+
+
+def test_is_transient_classification():
+    assert faults.is_transient(OSError(errno.EIO, "x"))
+    assert faults.is_transient(OSError(errno.ESTALE, "x"))
+    assert not faults.is_transient(FileNotFoundError(errno.ENOENT, "x"))
+    assert not faults.is_transient(PermissionError(errno.EACCES, "x"))
+    assert not faults.is_transient(ValueError("x"))
+
+
+# ---- streaming load: retry parity + watchdog ---------------------------------
+
+
+def test_streaming_load_retries_transient_block_faults_bitwise(tmp_path):
+    path, v = _graph_file(tmp_path)
+    clean = open_graph(path, engine="device", num_vertices=v).csr()
+    plan = FaultPlan([FaultSpec("block", "oserror", index=0, times=2),
+                      FaultSpec("block", "latency", index=0, delay_s=0.01)])
+    faulty = open_graph(path, engine="device", num_vertices=v,
+                        faults=plan).csr()
+    assert plan.injected() == {"block:oserror": 2, "block:latency": 1}
+    assert faults.counters()["io_retries"] >= 2
+    assert np.array_equal(np.asarray(clean.offsets), np.asarray(faulty.offsets))
+    assert np.array_equal(np.asarray(clean.targets), np.asarray(faulty.targets))
+
+
+def test_streaming_load_exhausted_retries_raise(tmp_path):
+    path, v = _graph_file(tmp_path)
+    plan = FaultPlan([FaultSpec("block", "oserror", index=0, times=-1)])
+    with pytest.raises(OSError, match="injected transient"):
+        open_graph(path, engine="device", num_vertices=v, faults=plan).csr()
+
+
+def test_stuck_block_source_raises_stage_timeout(tmp_path, monkeypatch):
+    path, v = _graph_file(tmp_path)
+    monkeypatch.setattr(faults, "WATCHDOG_S", 0.3)
+    plan = FaultPlan([FaultSpec("block", "stall", index=0, delay_s=2.0)])
+    t0 = time.perf_counter()
+    with pytest.raises(StageTimeout, match=r"byte span \[0, "):
+        open_graph(path, engine="device", num_vertices=v, faults=plan).csr()
+    assert time.perf_counter() - t0 < 1.5          # within budget, no hang
+    assert faults.counters()["stage_timeouts"] == 1
+
+
+# ---- SourceCache: open retries, quarantine, swap recovery --------------------
+
+
+def test_cache_open_retries_transient(tmp_path):
+    gv, _ = _snapshot(tmp_path)
+    cache = SourceCache(capacity=2)
+    with fault_plan(FaultPlan([FaultSpec("open", "oserror", times=2)])):
+        info = cache.query(gv, "info")
+    assert info.num_vertices == 50
+    st = cache.stats()["faults"]
+    assert st["open_retries"] == 2
+    assert st["io_retries"] >= 2
+
+
+def test_corrupt_section_quarantines_and_swap_recovers(tmp_path):
+    gv, v = _snapshot(tmp_path, "live.gvel")
+    other, _ = _snapshot(tmp_path, "other.gvel", seed=4)
+    cache = SourceCache(capacity=4)
+    good_deg = cache.query(gv, "degree", vertex=3)
+    cache.invalidate()                         # force reopen of the bad bytes
+
+    _corrupt_section(gv, "csr_indices")
+    with pytest.raises(CorruptGraphError) as ei:
+        cache.query(gv, "csr")
+    assert ei.value.path == gv and ei.value.section == "csr_indices"
+    # subsequent touches of the section fail fast from quarantine
+    with pytest.raises(CorruptGraphError, match="quarantined"):
+        cache.query(gv, "neighbors", vertex=3)
+    # ...but header-only ops, the untouched offsets section, and other
+    # graphs in the same cache keep serving
+    assert cache.query(gv, "info").num_vertices == v
+    assert cache.query(gv, "degree", vertex=3) == good_deg
+    assert cache.query(other, "csr").num_vertices == 50
+    st = cache.stats()["faults"]
+    assert st["quarantines"] == 1 and st["corrupt_errors"] >= 2
+    assert st["quarantined"] == [
+        {"path": gv, "section": "csr_indices", "count": 2}]
+
+    # swap a good snapshot onto the path: the quarantine lifts
+    el, _ = _graph_file(tmp_path, "fresh.el", seed=0)
+    _save_compressed(el, v, gv)
+    os.utime(gv, ns=(time.time_ns(), time.time_ns()))
+    csr = cache.query(gv, "csr")
+    assert csr.num_vertices == v
+    st = cache.stats()["faults"]
+    assert st["recovered"] == 1
+    assert st["quarantined"] == []
+
+
+def test_report_corrupt_unknown_section_blocks_everything_but_info(tmp_path):
+    gv, _ = _snapshot(tmp_path)
+    cache = SourceCache()
+    err = cache.report_corrupt(gv, ValueError("mystery damage"), op="csr")
+    assert isinstance(err, CorruptGraphError) and err.section == "unknown"
+    with pytest.raises(CorruptGraphError):
+        cache.query(gv, "degree", vertex=0)
+    assert cache.query(gv, "info").num_edges == 300      # () sections
+
+
+def test_snapshot_error_carries_section(tmp_path):
+    gv, _ = _snapshot(tmp_path)
+    _corrupt_section(gv, "csr_indices")
+    src = open_graph(gv)
+    with pytest.raises(SnapshotError) as ei:
+        src.csr()
+    assert ei.value.section == "csr_indices"
+
+
+# ---- uniform truncation/corruption messages ----------------------------------
+
+
+def test_codec_errors_name_frame_and_byte_offset(tmp_path):
+    from repro.core.codecs import (compress_frames, get_codec,
+                                   iter_decompressed_frames)
+    codec = get_codec("zlib")
+    raw = bytes(np.random.default_rng(0).integers(0, 256, 4096, np.uint8))
+    stream = compress_frames(raw, codec, frame_beta=512)
+    # mid-frame truncation: the error names the frame AND byte offset
+    with pytest.raises(ValueError, match=r"frame \d+ at byte \d+"):
+        list(iter_decompressed_frames(stream[:-5], codec, context="cut"))
+    # a dangling partial header names the frame and byte position too
+    with pytest.raises(ValueError,
+                       match=r"truncated frame header for frame \d+ at byte"):
+        list(iter_decompressed_frames(stream + b"\x01\x02\x03", codec,
+                                      context="hdr"))
+    # corrupt payload: checksum/decode error names frame + byte offset
+    bad = bytearray(stream)
+    bad[20] ^= 0xFF
+    with pytest.raises(ValueError, match=r"frame \d+ .*byte \d+"):
+        list(iter_decompressed_frames(bytes(bad), codec, context="bad"))
+
+
+# ---- prefetch pipelines never strand their consumer --------------------------
+
+
+def test_prefetcher_propagates_worker_exception():
+    def source(step):
+        if step == 2:
+            raise RuntimeError("worker died at step 2")
+        return {"step": step}
+
+    pf = Prefetcher(source, lookahead=2)
+    assert pf.get(expect_step=0)["step"] == 0
+    assert pf.get(expect_step=1)["step"] == 1
+    with pytest.raises(RuntimeError, match="worker died at step 2"):
+        pf.get(expect_step=2)
+    pf.close()
+
+
+def test_prefetcher_stuck_source_times_out():
+    def source(step):
+        time.sleep(5.0)
+        return {}
+
+    pf = Prefetcher(source, timeout=0.3)
+    t0 = time.perf_counter()
+    with pytest.raises(StageTimeout, match="stuck"):
+        pf.get()
+    assert time.perf_counter() - t0 < 2.0
+    pf.close()
+
+
+def test_corpus_stream_propagates_batch_failure(tmp_path, monkeypatch):
+    from repro.data.corpus import CorpusConfig, WalkCorpus
+    gv, v = _snapshot(tmp_path)
+    corpus = WalkCorpus(open_graph(gv), CorpusConfig(batch=2, seq=4))
+    real = corpus.batch_at
+
+    def flaky(step, **kw):
+        if step >= 1:
+            raise OSError(errno.EIO, "corpus storage yanked")
+        return real(step, **kw)
+
+    monkeypatch.setattr(corpus, "batch_at", flaky)
+    with corpus.batches() as stream:
+        step, batch = next(stream)
+        assert step == 0 and batch["tokens"].shape == (2, 4)
+        with pytest.raises(OSError, match="storage yanked"):
+            next(stream)
+
+
+# ---- cursor durability -------------------------------------------------------
+
+
+def test_save_cursor_fsyncs_file_and_directory(tmp_path, monkeypatch):
+    synced = []
+    real_fsync = os.fsync
+    monkeypatch.setattr(os, "fsync", lambda fd: (synced.append(fd),
+                                                 real_fsync(fd))[1])
+    cur = str(tmp_path / "cursor.json")
+    save_cursor(cur, 41)
+    assert load_cursor(cur) == 41
+    assert len(synced) == 2                    # tmp file + its directory
+    assert not [p for p in os.listdir(tmp_path) if p.startswith("cursor.json.tmp")]
+
+
+def test_save_cursor_crash_midway_keeps_previous(tmp_path, monkeypatch):
+    cur = str(tmp_path / "cursor.json")
+    save_cursor(cur, 7)
+
+    def boom(src, dst):
+        raise OSError(errno.EIO, "crash before rename")
+
+    monkeypatch.setattr(os, "replace", boom)
+    with pytest.raises(OSError):
+        save_cursor(cur, 8)
+    monkeypatch.undo()
+    assert load_cursor(cur) == 7               # old cursor intact
+
+
+# ---- zero-edge / empty graphs through the serving path -----------------------
+
+
+@pytest.mark.parametrize("v", [0, 5])
+def test_degenerate_graphs_serve_under_faults(tmp_path, v):
+    el = str(tmp_path / f"z{v}.el")
+    write_edgelist(el, np.array([], np.int64), np.array([], np.int64),
+                   None, base=1)
+    gv = _save_compressed(el, v, str(tmp_path / f"z{v}.gvel"), frame_beta=64)
+    cache = SourceCache()
+    plan = FaultPlan([FaultSpec("open", "oserror", times=1),
+                      FaultSpec("mmap", "latency", times=1, delay_s=0.01)])
+    with fault_plan(plan):
+        info = cache.query(gv, "info")
+        assert (info.num_vertices, info.num_edges) == (v, 0)
+        csr = cache.query(gv, "csr")
+        assert csr.num_vertices == v and len(csr.targets) == 0
+        assert np.array_equal(np.asarray(csr.offsets), np.zeros(v + 1, np.int64))
+        if v:
+            assert list(cache.query(gv, "neighbors", vertex=v - 1)) == []
+            assert cache.query(gv, "degree", vertex=0) == 0
+    assert plan.injected().get("open:oserror") == 1
+    assert cache.stats()["faults"]["open_retries"] == 1
+
+
+def test_zero_edge_streaming_matches_numpy(tmp_path):
+    el = str(tmp_path / "z.el")
+    write_edgelist(el, np.array([], np.int64), np.array([], np.int64),
+                   None, base=1)
+    a = open_graph(el, engine="numpy", num_vertices=6).csr()
+    b = open_graph(el, engine="device", num_vertices=6).csr()
+    assert np.array_equal(np.asarray(a.offsets), np.asarray(b.offsets))
+    assert len(np.asarray(b.targets)) == 0
+
+
+# ---- structured errors -------------------------------------------------------
+
+
+def test_shard_load_error_carries_log():
+    err = ShardLoadError("shard 2 failed", shard=2,
+                         fault_log=["attempt 1: OSError: x"])
+    assert err.shard == 2 and err.fault_log == ["attempt 1: OSError: x"]
+    assert isinstance(err, RuntimeError)
+
+
+def test_stats_faults_block_shape(tmp_path):
+    gv, _ = _snapshot(tmp_path)
+    cache = SourceCache()
+    cache.query(gv, "info")
+    st = cache.stats()["faults"]
+    for key in ("open_retries", "open_faults", "corrupt_errors",
+                "quarantines", "recovered", "wait_timeouts",
+                "io_retries", "stage_timeouts", "shard_retries",
+                "quarantined", "injected"):
+        assert key in st
+    assert st["injected"] == {}                # no plan active
+
+
+# ---- sharded load: shard-level re-execution (4 forced host devices) ----------
+
+
+def test_sharded_shard_reexecution_bitwise(devices4, tmp_path):
+    """Tentpole (2): a shard whose in-span retries are exhausted is
+    re-executed over its byte span (fresh source + accumulators) and
+    the result is bitwise equal to the fault-free load; a shard that
+    never recovers fails with ShardLoadError carrying the fault log."""
+    code = f"""
+import numpy as np
+from repro.core import faults, open_graph
+from repro.core.compat import make_mesh
+
+mesh = make_mesh((4,), ("data",))
+rng = np.random.default_rng(5)
+n, v = 4000, 300
+src = rng.integers(1, v + 1, n); dst = rng.integers(1, v + 1, n)
+path = r"{tmp_path}/g.el"
+open(path, "w").write("\\n".join(f"{{s}} {{d}}" for s, d in zip(src, dst)) + "\\n")
+
+clean = open_graph(path, engine="device", beta=2048).csr_sharded(mesh)
+
+# 3 consecutive stage failures on block 0: in-span retries (3 attempts)
+# exhaust, the shard re-executes once, and the 4th stage call is clean
+plan = faults.FaultPlan([faults.FaultSpec("block", "oserror", index=0, times=3)])
+faults.set_fault_plan(plan)
+faulty = open_graph(path, engine="device", beta=2048).csr_sharded(mesh)
+faults.set_fault_plan(None)
+assert plan.injected() == {{"block:oserror": 3}}, plan.injected()
+c = faults.counters()
+assert c["shard_retries"] == 1, c
+assert c["io_retries"] >= 2, c
+assert np.array_equal(np.asarray(clean.offsets), np.asarray(faulty.offsets))
+assert np.array_equal(np.asarray(clean.targets), np.asarray(faulty.targets))
+
+# a permanently-failing shard: budget exhausts into ShardLoadError
+faults.set_fault_plan(faults.FaultPlan(
+    [faults.FaultSpec("block", "oserror", index=0, times=-1)]))
+try:
+    open_graph(path, engine="device", beta=2048).csr_sharded(mesh)
+    raise SystemExit("expected ShardLoadError")
+except faults.ShardLoadError as exc:
+    assert exc.shard == 0, exc.shard
+    assert len(exc.fault_log) == faults.SHARD_RETRIES + 1, exc.fault_log
+    assert "byte span [0," in str(exc), str(exc)
+finally:
+    faults.set_fault_plan(None)
+print("SHARD-RETRY-OK")
+"""
+    assert "SHARD-RETRY-OK" in devices4(code)

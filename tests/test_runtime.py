@@ -159,3 +159,93 @@ def test_close_restores_signal_handlers(params):
                       ft=FTConfig(handle_signals=True)) as rt:
         assert signal.getsignal(signal.SIGUSR1) == rt.coord._on_signal
     assert signal.getsignal(signal.SIGUSR1) == before
+
+
+# ---- robustness: corrupt graphs + degenerate graphs (docs/robustness.md) ----
+
+def _compressed_snap(tmp_path, name, *, seed=2):
+    """zlib-framed snapshot with small frames (corruption is section-
+    local, so the quarantine scope is observable)."""
+    from repro.core import load_edgelist, save_snapshot
+    from repro.core.csr import convert_to_csr
+    el = str(tmp_path / (name + ".el"))
+    v, _ = make_graph_file(el, "rmat", scale=7, edge_factor=6, seed=seed)
+    elist = load_edgelist(el, engine="numpy", num_vertices=v, base=1)
+    gv = str(tmp_path / name)
+    save_snapshot(gv, edgelist=elist,
+                  csr=convert_to_csr(elist, engine="numpy"),
+                  compress="zlib", frame_beta=96)
+    return gv, v
+
+
+def test_corrupt_graph_quarantined_while_others_serve(params, tmp_path):
+    """Tentpole (3): a CRC-failing section quarantines (path, section),
+    requests against it get structured CorruptGraphError, admission
+    degrades via the straggler path, other graphs keep serving, and a
+    swap on disk recovers — all visible in stats()."""
+    from test_faults import _corrupt_section
+    from repro.core.faults import CorruptGraphError
+
+    live, v = _compressed_snap(tmp_path, "live.gvel", seed=2)
+    good, _ = _compressed_snap(tmp_path, "good.gvel", seed=9)
+    import shutil
+    shutil.copyfile(live, live + ".bak")
+    rt = _runtime(params)
+    _corrupt_section(live, "csr_indices")
+
+    with pytest.raises(CorruptGraphError) as ei:
+        rt.submit(live, max_new=2)
+    assert ei.value.path == live and ei.value.section == "csr_indices"
+    assert rt.engine.max_active == 1          # degraded, not stalled
+    # repeat offenders fail fast from quarantine, no second degrade
+    with pytest.raises(CorruptGraphError, match="quarantined"):
+        rt.submit(live, max_new=2)
+    # ...while other graphs in the same cache/runtime still serve
+    req = rt.submit(good, max_new=3)
+    rt.drain()
+    assert req.done and len(req.out) == 3
+    st = rt.stats()
+    assert st["corrupt_requests"] == 1
+    assert st["degrades"] == 1
+    faults_st = st["cache"]["faults"]
+    assert faults_st["quarantines"] == 1
+    assert faults_st["quarantined"][0]["section"] == "csr_indices"
+    assert any("fault: corrupt graph" in e for e in rt.coord.events)
+
+    # swap the good bytes back: quarantine lifts, requests serve again
+    os.replace(live + ".bak", live)
+    os.utime(live)
+    req2 = rt.submit(live, max_new=2)
+    rt.drain()
+    assert req2.done and len(req2.out) == 2
+    assert rt.cache.stats()["faults"]["recovered"] >= 1
+
+
+def test_zero_edge_graph_serves_end_to_end(params, tmp_path):
+    """Satellite (4): a V>0, E=0 graph flows through SourceCache.query
+    -> neighbors/degree -> a full ServeRuntime request, under injected
+    open faults (retried transparently)."""
+    from repro.core import load_edgelist, save_snapshot, write_edgelist
+    from repro.core.csr import convert_to_csr
+    from repro.core.faults import FaultPlan, FaultSpec, fault_plan
+
+    el = str(tmp_path / "zero.el")
+    write_edgelist(el, np.array([], np.int64), np.array([], np.int64),
+                   None, base=1)
+    elist = load_edgelist(el, engine="numpy", num_vertices=6, base=1)
+    gv = str(tmp_path / "zero.gvel")
+    save_snapshot(gv, edgelist=elist,
+                  csr=convert_to_csr(elist, engine="numpy"),
+                  compress="zlib", frame_beta=64)
+
+    rt = _runtime(params)
+    plan = FaultPlan([FaultSpec("open", "oserror", times=1)])
+    with fault_plan(plan):
+        assert list(rt.cache.query(gv, "neighbors", vertex=0)) == []
+        assert rt.cache.query(gv, "degree", vertex=5) == 0
+        req = rt.submit(gv, max_new=3)       # edgeless walk: self-loops
+        rt.drain()
+    assert req.done and len(req.out) == 3
+    assert plan.injected() == {"open:oserror": 1}
+    assert rt.cache.stats()["faults"]["open_retries"] == 1
+    assert rt.stats()["corrupt_requests"] == 0
